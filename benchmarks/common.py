@@ -1,0 +1,32 @@
+"""Shared benchmark config. REPRO_BENCH_FAST=1 shrinks everything for CI."""
+from __future__ import annotations
+
+import os
+import time
+
+FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+
+# CPU-budget settings (paper used 512^3 on 4x RTX4090; we scale down and
+# validate trends — EXPERIMENTS.md §Reproduction-notes).  The single-core
+# container bounds the budget: 48^3 volumes, 80 epochs, GWLZ-8 for the REB
+# sweep (group count scaled to volume; the group-count sweep itself is
+# table3).
+VOLUME = (32, 32, 32) if FAST else (48, 48, 48)
+EPOCHS = 30 if FAST else 80
+REBS = (5e-3, 1e-3, 1e-4) if FAST else (5e-3, 1e-3, 1e-4, 1e-5)
+GROUPS = (1, 4) if FAST else (1, 5, 10, 20)
+FIELDS = ("temperature",) if FAST else ("temperature", "dark_matter_density")
+TABLE2_GROUPS = 4 if FAST else 8
+
+
+def timed(fn, *args, repeats=3, **kw):
+    fn(*args, **kw)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6  # us
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

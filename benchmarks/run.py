@@ -1,0 +1,25 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  REPRO_BENCH_FAST=1 shrinks settings.
+Roofline terms for the TPU target come from the compiled dry-run
+(``python -m repro.launch.dryrun`` + ``python -m repro.launch.roofline``).
+"""
+from __future__ import annotations
+
+import traceback
+
+
+def main() -> None:
+    from benchmarks import fig5_losscurves, table2_psnr, table3_groups, throughput
+
+    print("name,us_per_call,derived")
+    for mod in (throughput, fig5_losscurves, table3_groups, table2_psnr):
+        try:
+            mod.main()
+        except Exception as e:  # keep the harness going; failures are visible
+            print(f"{mod.__name__},0,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Paper Table 2: PSNR (SZ3 vs GWLZ-n) + file-size overhead across REBs."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import EPOCHS, FIELDS, REBS, TABLE2_GROUPS, VOLUME, emit
+from repro.core import GWLZ, GWLZTrainConfig
+from repro.data import nyx_like_field
+
+
+def main(n_groups: int | None = None) -> None:
+    n_groups = TABLE2_GROUPS if n_groups is None else n_groups
+    for field in FIELDS:
+        x = jnp.asarray(nyx_like_field(VOLUME, field, seed=1))
+        for reb in REBS:
+            cfg = GWLZTrainConfig(n_groups=n_groups, epochs=EPOCHS, batch_size=10,
+                                  min_group_pixels=256)
+            import time
+
+            t0 = time.perf_counter()
+            art, st = GWLZ(train_cfg=cfg).compress(x, rel_eb=reb)
+            dt = (time.perf_counter() - t0) * 1e6
+            emit(
+                f"table2/{field}/reb{reb:g}",
+                dt,
+                f"psnr_sz={st.psnr_sz:.1f};psnr_gwlz={st.psnr_gwlz:.1f};"
+                f"improve%={100*(st.psnr_gwlz-st.psnr_sz)/st.psnr_sz:.1f};"
+                f"overhead={st.overhead:.4f};cr_sz={st.cr_sz:.1f}",
+            )
+
+
+if __name__ == "__main__":
+    main()

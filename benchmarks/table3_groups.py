@@ -1,0 +1,36 @@
+"""Paper Table 3: PSNR vs number of groups (GWLZ-1/5/10/20)."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+
+from benchmarks.common import EPOCHS, GROUPS, VOLUME, emit
+from repro.core import metrics
+from repro.core.trainer import GWLZTrainConfig, enhance, train_enhancers
+from repro.data import nyx_like_field
+from repro.sz import compress
+
+
+def main(reb: float = 5e-3, field: str = "temperature") -> None:
+    x = jnp.asarray(nyx_like_field(VOLUME, field, seed=1))
+    art, recon = compress(x, rel_eb=reb, backend="zlib")
+    resid = x - recon
+    psnr_sz = float(metrics.psnr(x, recon))
+    emit(f"table3/{field}/sz3", 0.0, f"psnr={psnr_sz:.1f}")
+    for g in GROUPS:
+        cfg = GWLZTrainConfig(n_groups=g, epochs=EPOCHS, batch_size=10, min_group_pixels=256)
+        t0 = time.perf_counter()
+        model, hist = train_enhancers(recon, resid, cfg)
+        dt = (time.perf_counter() - t0) * 1e6
+        enh = enhance(recon, model)
+        emit(
+            f"table3/{field}/gwlz-{g}",
+            dt,
+            f"psnr={float(metrics.psnr(x, enh)):.1f};"
+            f"active={int((model.rscale > 0).sum())}/{g}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Compression/decompression + kernel throughput (host CPU; the TPU path is
+characterized by the dry-run roofline, EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import FAST, VOLUME, emit, timed
+from repro.core import enhancer as E
+from repro.data import nyx_like_field
+from repro.kernels import ops
+from repro.sz import SZCompressor
+
+
+def main() -> None:
+    x = jnp.asarray(nyx_like_field(VOLUME, "temperature", seed=1))
+    nbytes = x.size * 4
+
+    for pred in ("lorenzo", "interp"):
+        comp = SZCompressor(predictor=pred, backend="zlib")
+        (art, recon), us = timed(lambda: comp.compress(x, rel_eb=1e-3), repeats=2)
+        emit(f"throughput/compress/{pred}", us, f"MBps={nbytes/us:.1f};cr={nbytes/art.nbytes:.1f}")
+        _, us = timed(lambda: comp.decompress(art), repeats=2)
+        emit(f"throughput/decompress/{pred}", us, f"MBps={nbytes/us:.1f}")
+
+    # kernels (interpret mode on CPU: correctness-path timing only)
+    _, us = timed(lambda: ops.lorenzo_quant_op(x, 1.0, use_pallas=False).block_until_ready(), repeats=3)
+    emit("throughput/kernel/lorenzo_ref", us, f"MBps={nbytes/us:.1f}")
+
+    import jax
+
+    p = E.init_params(jax.random.PRNGKey(0))
+    s = E.init_state()
+    slices = x[:16]
+    _, us = timed(lambda: ops.enhancer_fused_op(slices, p, s, use_pallas=False).block_until_ready(), repeats=3)
+    emit("throughput/kernel/enhancer_ref", us, f"MBps={slices.size*4/us:.1f}")
+
+    edges = jnp.linspace(float(x.min()), float(x.max()) + 1, 21)
+    n = (x.size // 128) * 128
+    xf = x.ravel()[:n]
+    _, us = timed(lambda: ops.group_hist_op(xf.reshape(-1, 128), edges, n_groups=20, use_pallas=False)[0].block_until_ready(), repeats=3)
+    emit("throughput/kernel/group_hist_ref", us, f"MBps={n*4/us:.1f}")
+
+
+if __name__ == "__main__":
+    main()

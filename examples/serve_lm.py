@@ -1,0 +1,22 @@
+"""Batched serving demo: ring-buffer KV caches, greedy decode.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch gemma3-1b
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve as serve_driver
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    args = ap.parse_args()
+    serve_driver.main(["--arch", args.arch, "--reduced", "--batch", "4",
+                       "--prompt-len", "8", "--gen-len", "24", "--ctx", "64"])
+
+
+if __name__ == "__main__":
+    main()

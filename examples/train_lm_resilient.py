@@ -1,0 +1,39 @@
+"""End-to-end resilient LM training with GWLZ-compressed checkpoints.
+
+    PYTHONPATH=src python examples/train_lm_resilient.py --arch gemma3-1b
+
+Runs the production training driver on a reduced config: deterministic token
+pipeline, jitted train step, async checkpoints every 20 steps with GWLZ
+error-bounded tensor compression, an injected node failure at step 30, and
+automatic restore-and-replay.  (Full-size configs lower via
+``python -m repro.launch.dryrun`` — this container is CPU-only.)
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import train as train_driver
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--steps", type=int, default=60)
+    args = ap.parse_args()
+    losses = train_driver.main([
+        "--arch", args.arch, "--reduced",
+        "--steps", str(args.steps),
+        "--batch", "4", "--seq", "32",
+        "--ckpt-every", "20",
+        "--ckpt-dir", "/tmp/repro_example_ckpt",
+        "--gwlz-ckpt-eb", "1e-4",
+        "--inject-failure-at", "30",
+    ])
+    assert losses[-1] < losses[0], "training should reduce loss"
+    print("resilient training completed; loss improved "
+          f"{losses[0]:.3f} -> {losses[-1]:.3f} despite the injected failure")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.checkpoint.gwlz_ckpt import compress_tensor, decompress_tensor
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager", "compress_tensor", "decompress_tensor"]

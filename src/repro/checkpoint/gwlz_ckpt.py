@@ -1,0 +1,73 @@
+"""GWLZ-compressed checkpoint tensors (the paper's technique applied to the
+framework's own state — DESIGN.md §4).
+
+Weight tensors are error-bounded-compressed with the SZ substrate; tensors
+large enough to amortize a few enhancers get the full GWLZ treatment (grouped
+residual enhancers with a short training budget).  Restores satisfy
+|w - w'| <= rel_eb * range(w) elementwise, which for trained networks at
+rel_eb <= 1e-4 is well under the noise floor of bf16 casting.
+"""
+from __future__ import annotations
+
+import struct
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pipeline import GWLZ
+from repro.core.trainer import GWLZTrainConfig
+from repro.sz.szjax import SZCompressed, SZCompressor
+
+_MAGIC = b"GWCK"
+
+
+def _as_volume(v: np.ndarray) -> tuple[np.ndarray, tuple]:
+    """SZ operates on 1-3D grids; fold higher ranks into 3D."""
+    shape = v.shape
+    if v.ndim <= 3:
+        return v, shape
+    lead = int(np.prod(shape[:-2]))
+    return v.reshape(lead, shape[-2], shape[-1]), shape
+
+
+def compress_tensor(
+    v: np.ndarray,
+    *,
+    rel_eb: float = 1e-4,
+    enhance_threshold: int = 1 << 22,
+    epochs: int = 30,
+    n_groups: int = 8,
+) -> bytes:
+    orig_dtype = str(v.dtype)
+    vol, shape = _as_volume(np.asarray(v, np.float32))
+    use_gwlz = vol.size >= enhance_threshold
+    if use_gwlz:
+        cfg = GWLZTrainConfig(n_groups=n_groups, epochs=epochs, batch_size=8)
+        artifact, _stats = GWLZ(train_cfg=cfg, clamp_to_bound=True).compress(
+            jnp.asarray(vol), rel_eb=rel_eb
+        )
+    else:
+        artifact, _ = SZCompressor(predictor="interp", order="cubic", backend="zlib").compress(
+            jnp.asarray(vol), rel_eb=rel_eb
+        )
+    payload = artifact.to_bytes()
+    dt = orig_dtype.encode()
+    head = _MAGIC + struct.pack("<BB", len(shape), len(dt)) + dt
+    head += struct.pack(f"<{len(shape)}q", *shape)
+    return head + payload
+
+
+def decompress_tensor(blob: bytes) -> np.ndarray:
+    assert blob[:4] == _MAGIC
+    ndim, dlen = struct.unpack_from("<BB", blob, 4)
+    off = 6
+    dtype = blob[off : off + dlen].decode()
+    off += dlen
+    shape = struct.unpack_from(f"<{ndim}q", blob, off)
+    off += 8 * ndim
+    artifact = SZCompressed.from_bytes(blob[off:])
+    if "gwlz" in artifact.extras:
+        out = GWLZ(clamp_to_bound=True).decompress(artifact)
+    else:
+        out = SZCompressor().decompress(artifact)
+    return np.asarray(out, np.float32).reshape(shape).astype(dtype)

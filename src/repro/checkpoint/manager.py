@@ -1,0 +1,145 @@
+"""Checkpoint manager: async save, atomic publish, elastic restore.
+
+Checkpoints are mesh-agnostic (full logical arrays), so restoring onto a
+different mesh/device count is just re-device_put with the new shardings —
+the elastic-scaling path (runtime/elastic.py) and the restart path
+(runtime/fault.py) both go through here.  An optional GWLZ stage compresses
+large tensors error-bounded (gwlz_ckpt.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(k.key) if isinstance(k, jax.tree_util.DictKey) else str(k.idx)
+            for k in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _treedef_of(tree):
+    return jax.tree_util.tree_structure(tree)
+
+
+class CheckpointManager:
+    """save(step, tree) -> ckpt_dir/step_N/{arrays.npz, manifest.json}."""
+
+    def __init__(self, directory: str, *, keep: int = 3, async_save: bool = True,
+                 gwlz_rel_eb: float | None = None):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self.gwlz_rel_eb = gwlz_rel_eb
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree, *, block: bool = False) -> None:
+        flat = _flatten(tree)  # host copy happens here, synchronously
+        self.wait()
+        if self.async_save and not block:
+            self._thread = threading.Thread(target=self._write, args=(step, flat), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, flat)
+
+    def _write(self, step: int, flat: dict[str, np.ndarray]) -> None:
+        tmp = os.path.join(self.dir, f".tmp_step_{step}")
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "time": time.time(), "keys": {}, "gwlz": {}}
+        plain: dict[str, np.ndarray] = {}
+        for k, v in flat.items():
+            manifest["keys"][k] = {"shape": list(v.shape), "dtype": str(v.dtype)}
+            if self.gwlz_rel_eb is not None and v.size >= 65536 and str(v.dtype) in ("float32", "bfloat16"):
+                from repro.checkpoint.gwlz_ckpt import compress_tensor
+
+                blob = compress_tensor(v, rel_eb=self.gwlz_rel_eb)
+                with open(os.path.join(tmp, k.replace(_SEP, "__") + ".gwlz"), "wb") as f:
+                    f.write(blob)
+                manifest["gwlz"][k] = True
+            else:
+                if str(v.dtype) == "bfloat16":  # np.savez can't serialize bf16
+                    v = v.view(np.uint16)
+                plain[k.replace(_SEP, "__")] = v
+        np.savez(os.path.join(tmp, "arrays.npz"), **plain)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True)
+
+    # -- restore --------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_"):
+                out.append(int(d[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, target_tree, step: int | None = None, *, shardings=None):
+        """Restore into the structure of ``target_tree`` (shapes validated).
+        ``shardings``: optional pytree of NamedSharding for elastic re-shard."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        manifest = json.load(open(os.path.join(d, "manifest.json")))
+        npz = np.load(os.path.join(d, "arrays.npz"))
+
+        paths, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+        shard_leaves = (
+            jax.tree_util.tree_leaves(shardings, is_leaf=lambda s: hasattr(s, "spec"))
+            if shardings is not None else [None] * len(paths)
+        )
+        leaves = []
+        for (path, leaf), shard in zip(paths, shard_leaves):
+            key = _SEP.join(
+                str(k.key) if isinstance(k, jax.tree_util.DictKey) else str(k.idx)
+                for k in path
+            )
+            fkey = key.replace(_SEP, "__")
+            if manifest["gwlz"].get(key):
+                from repro.checkpoint.gwlz_ckpt import decompress_tensor
+
+                arr = decompress_tensor(open(os.path.join(d, fkey + ".gwlz"), "rb").read())
+            else:
+                arr = npz[fkey]
+                if manifest["keys"][key]["dtype"] == "bfloat16":
+                    import ml_dtypes
+
+                    arr = arr.view(ml_dtypes.bfloat16)
+            exp = tuple(manifest["keys"][key]["shape"])
+            assert tuple(arr.shape) == exp == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+            arr = np.asarray(jax.numpy.asarray(arr, dtype=leaf.dtype))
+            leaves.append(jax.device_put(arr, shard) if shard is not None else arr)
+        return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,13 @@
+"""Config helpers shared by the per-architecture files."""
+from __future__ import annotations
+
+from repro.models.attention import MASK_CAUSAL, MASK_CHUNKED, MASK_SLIDING, AttnConfig, MLAConfig
+from repro.models.decoder import LayerSpec, ModelConfig, default_pattern
+from repro.models.mlp import MoEConfig
+from repro.models.ssm import Mamba2Config, RWKV6Config
+
+__all__ = [
+    "AttnConfig", "MLAConfig", "MoEConfig", "Mamba2Config", "RWKV6Config",
+    "LayerSpec", "ModelConfig", "default_pattern",
+    "MASK_CAUSAL", "MASK_SLIDING", "MASK_CHUNKED",
+]

@@ -1,0 +1,17 @@
+"""gwlz-nyx: the paper's own workload as a production-mesh cell.
+
+512^3 Nyx field, 32 enhancer groups (paper uses 20; padded to the model-axis
+multiple), group axis -> "model", slice batch -> "data"/"pod".  Used by
+``python -m repro.launch.dryrun --arch gwlz-nyx`` and hillclimbed in
+EXPERIMENTS.md §Perf cell 4.
+"""
+from repro.launch.gwlz_dist import DistGWLZConfig
+
+FAMILY = "gwlz"
+LONG_CONTEXT_OK = False
+
+
+def get_config(reduced: bool = False) -> DistGWLZConfig:
+    if reduced:
+        return DistGWLZConfig(n_groups=4, volume=32, batch_slices=8)
+    return DistGWLZConfig(n_groups=32, volume=512, batch_slices=512)

@@ -1,0 +1,19 @@
+"""GWLZ core: the paper's contribution as a composable JAX module."""
+from repro.core import enhancer, grouping, metrics
+from repro.core.pipeline import GWLZ, GWLZStats, quick_compress, serialize_model, deserialize_model
+from repro.core.trainer import GWLZModel, GWLZTrainConfig, enhance, train_enhancers
+
+__all__ = [
+    "enhancer",
+    "grouping",
+    "metrics",
+    "GWLZ",
+    "GWLZStats",
+    "quick_compress",
+    "serialize_model",
+    "deserialize_model",
+    "GWLZModel",
+    "GWLZTrainConfig",
+    "enhance",
+    "train_enhancers",
+]

@@ -1,0 +1,28 @@
+"""Compression-quality metrics (paper §2.1)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mse(x, y):
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    return jnp.mean((x - y) ** 2)
+
+
+def vrange(x):
+    x = jnp.asarray(x)
+    return jnp.max(x) - jnp.min(x)
+
+
+def psnr(x, y):
+    """PSNR per Eq. (1): 20 log10 vrange(x) - 10 log10 mse(x, y)."""
+    return 20.0 * jnp.log10(vrange(x)) - 10.0 * jnp.log10(jnp.maximum(mse(x, y), 1e-30))
+
+
+def nrmse(x, y):
+    return jnp.sqrt(mse(x, y)) / vrange(x)
+
+
+def max_abs_err(x, y):
+    return jnp.max(jnp.abs(jnp.asarray(x) - jnp.asarray(y)))

@@ -1,0 +1,158 @@
+"""GWLZ end-to-end pipeline (paper Figs. 1-2): compression module +
+reconstruction module, with the trained enhancer weights attached to the
+compressed stream (fp32, as in §4.1)."""
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics
+from repro.core.trainer import (
+    GWLZModel,
+    GWLZTrainConfig,
+    enhance,
+    train_enhancers,
+)
+from repro.sz.szjax import SZCompressed, SZCompressor
+
+_GW_MAGIC = b"GWLZ"
+
+
+# ---------------------------------------------------------------------------
+# model (de)serialization — becomes extras["gwlz"] in the SZ artifact
+# ---------------------------------------------------------------------------
+
+
+def serialize_model(model: GWLZModel) -> bytes:
+    cfg = model.cfg
+    head = _GW_MAGIC + struct.pack(
+        "<IIIB3x",
+        cfg.n_groups,
+        cfg.channels,
+        {"quantile": 0, "range": 1, "log": 2}[cfg.strategy],
+        1 if cfg.residual_learning else 0,
+    )
+    blobs = []
+    leaves, _ = jax.tree_util.tree_flatten(model.params)
+    leaves += jax.tree_util.tree_flatten(model.bn_state)[0]
+    leaves += [model.edges, model.rscale]
+    for leaf in leaves:
+        arr = np.asarray(leaf, np.float32)
+        blobs.append(struct.pack("<I", arr.size) + arr.tobytes())
+    return head + b"".join(blobs)
+
+
+def deserialize_model(blob: bytes) -> GWLZModel:
+    assert blob[:4] == _GW_MAGIC, "bad GWLZ model blob"
+    n_groups, channels, strat, resid = struct.unpack_from("<IIIB", blob, 4)
+    cfg = GWLZTrainConfig(
+        n_groups=n_groups,
+        channels=channels,
+        strategy={0: "quantile", 1: "range", 2: "log"}[strat],
+        residual_learning=bool(resid),
+    )
+    off = 4 + struct.calcsize("<IIIB3x")
+
+    def read(shape):
+        nonlocal off
+        (n,) = struct.unpack_from("<I", blob, off)
+        off += 4
+        arr = np.frombuffer(blob, np.float32, n, offset=off).copy().reshape(shape)
+        off += 4 * n
+        return jnp.asarray(arr)
+
+    G, C = n_groups, channels
+    params = {
+        "b1": read((G, C)),
+        "b2": read((G, 1)),
+        "beta": read((G, C)),
+        "gamma": read((G, C)),
+        "w1": read((G, 3, 3, 1, C)),
+        "w2": read((G, 3, 3, C, 1)),
+    }
+    bn_state = {"mean": read((G, C)), "var": read((G, C))}
+    edges = read((G + 1,))
+    rscale = read((G,))
+    return GWLZModel(params=params, bn_state=bn_state, edges=edges, rscale=rscale, cfg=cfg)
+
+
+# ---------------------------------------------------------------------------
+# pipeline
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class GWLZStats:
+    psnr_sz: float
+    psnr_gwlz: float
+    cr_sz: float
+    cr_gwlz: float
+    overhead: float  # extra bytes / sz bytes (paper Table 2 col 5)
+    max_err_sz: float
+    max_err_gwlz: float
+    eb_abs: float
+    n_model_params: int
+    loss_history: np.ndarray | None = None
+
+
+class GWLZ:
+    """compress(): SZ3-class compression + group-wise enhancer training.
+    decompress(): SZ decode + group-wise enhancement (Figs. 1-2)."""
+
+    def __init__(
+        self,
+        sz: SZCompressor | None = None,
+        train_cfg: GWLZTrainConfig = GWLZTrainConfig(),
+        clamp_to_bound: bool = False,
+    ):
+        self.sz = sz or SZCompressor()
+        self.train_cfg = train_cfg
+        self.clamp_to_bound = clamp_to_bound
+
+    def compress(
+        self, x: jax.Array, *, rel_eb: float | None = None, abs_eb: float | None = None,
+        callback=None,
+    ) -> tuple[SZCompressed, GWLZStats]:
+        x = jnp.asarray(x, jnp.float32)
+        artifact, recon = self.sz.compress(x, rel_eb=rel_eb, abs_eb=abs_eb)
+        sz_bytes = artifact.nbytes
+        residual = x - recon
+
+        model, history = train_enhancers(recon, residual, self.train_cfg, callback=callback)
+        artifact.extras["gwlz"] = serialize_model(model)
+
+        clamp = artifact.eb_abs if self.clamp_to_bound else None
+        enhanced = enhance(recon, model, clamp_eb=clamp)
+        total_bytes = artifact.nbytes
+        stats = GWLZStats(
+            psnr_sz=float(metrics.psnr(x, recon)),
+            psnr_gwlz=float(metrics.psnr(x, enhanced)),
+            cr_sz=float(x.nbytes / sz_bytes),
+            cr_gwlz=float(x.nbytes / total_bytes),
+            overhead=float((total_bytes - sz_bytes) / sz_bytes),
+            max_err_sz=float(metrics.max_abs_err(x, recon)),
+            max_err_gwlz=float(metrics.max_abs_err(x, enhanced)),
+            eb_abs=artifact.eb_abs,
+            n_model_params=model.n_params,
+            loss_history=history["loss"],
+        )
+        return artifact, stats
+
+    def decompress(self, artifact: SZCompressed) -> jax.Array:
+        recon = self.sz.decompress(artifact)
+        blob = artifact.extras.get("gwlz")
+        if blob is None:
+            return recon
+        model = deserialize_model(blob)
+        clamp = artifact.eb_abs if self.clamp_to_bound else None
+        return enhance(recon, model, clamp_eb=clamp)
+
+
+def quick_compress(x, rel_eb=1e-3, n_groups=20, epochs=60, **kw):
+    """Convenience entry point used by examples/tests (reduced epochs)."""
+    cfg = GWLZTrainConfig(n_groups=n_groups, epochs=epochs, **kw)
+    return GWLZ(train_cfg=cfg).compress(x, rel_eb=rel_eb)

@@ -1,0 +1,8 @@
+from repro.data.synthetic import (
+    NYX_FIELDS,
+    field_stats,
+    gaussian_random_field,
+    nyx_like_field,
+)
+
+__all__ = ["NYX_FIELDS", "field_stats", "gaussian_random_field", "nyx_like_field"]

@@ -1,0 +1,87 @@
+"""Synthetic LM token pipeline: deterministic, seeded, host-prefetched.
+
+Batches are addressed by step index (``batch_at``) so the ResilientLoop can
+replay exactly after a restart — the property the fault-tolerance tests
+assert.  A background prefetch thread keeps the host ahead of the device.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class TokenPipelineConfig:
+    vocab: int
+    batch: int
+    seq: int
+    seed: int = 0
+    zipf_a: float = 1.2  # natural-language-ish marginal distribution
+
+
+class TokenPipeline:
+    def __init__(self, cfg: TokenPipelineConfig):
+        self.cfg = cfg
+        # Zipfian unigram table (clipped to vocab)
+        ranks = np.arange(1, cfg.vocab + 1, dtype=np.float64)
+        p = ranks ** (-cfg.zipf_a)
+        self._p = p / p.sum()
+
+    def batch_at(self, step: int) -> dict[str, np.ndarray]:
+        """Deterministic batch for a global step (replayable)."""
+        rng = np.random.default_rng((self.cfg.seed << 20) ^ step)
+        toks = rng.choice(self.cfg.vocab, size=(self.cfg.batch, self.cfg.seq + 1), p=self._p)
+        toks = toks.astype(np.int32)
+        return {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+
+    def prefetch(self, start_step: int, depth: int = 2):
+        """Generator with a background thread filling a bounded queue."""
+        q: queue.Queue = queue.Queue(maxsize=depth)
+        stop = threading.Event()
+
+        def worker():
+            s = start_step
+            while not stop.is_set():
+                q.put((s, self.batch_at(s)))
+                s += 1
+
+        t = threading.Thread(target=worker, daemon=True)
+        t.start()
+        try:
+            while True:
+                yield q.get()
+        finally:
+            stop.set()
+
+
+class NyxBlockPipeline:
+    """Sharded loader for science volumes: yields (block_coords, block) tiles
+    of a large field so multi-host GWLZ jobs stream the volume data-parallel."""
+
+    def __init__(self, volume: np.ndarray, block: tuple[int, int, int]):
+        self.volume = volume
+        self.block = block
+        Z, Y, X = volume.shape
+        bz, by, bx = block
+        assert Z % bz == 0 and Y % by == 0 and X % bx == 0
+        self.grid = (Z // bz, Y // by, X // bx)
+
+    def __iter__(self):
+        bz, by, bx = self.block
+        for iz in range(self.grid[0]):
+            for iy in range(self.grid[1]):
+                for ix in range(self.grid[2]):
+                    yield (iz, iy, ix), self.volume[
+                        iz * bz : (iz + 1) * bz,
+                        iy * by : (iy + 1) * by,
+                        ix * bx : (ix + 1) * bx,
+                    ]
+
+    def shard(self, host_id: int, n_hosts: int):
+        """Round-robin block assignment per host (data-parallel compression)."""
+        for i, (coords, blk) in enumerate(self):
+            if i % n_hosts == host_id:
+                yield coords, blk

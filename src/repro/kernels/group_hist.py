@@ -1,0 +1,60 @@
+"""Fused group-assignment + histogram Pallas kernel (GWLZ grouping pass).
+
+Computes per-element group ids from value-range edges and the global group
+histogram in one sweep over the volume (flattened to [N, 128] lanes).  The
+histogram accumulates in a VMEM-resident output block revisited by every grid
+step (TPU grid steps are sequential), initialized at step 0.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, edges_ref, ids_ref, hist_ref, *, n_groups: int):
+    i = pl.program_id(0)
+    x = x_ref[...]  # [BB, 128]
+    edges = edges_ref[...]  # [G+1]
+    ge = (x[:, :, None] >= edges[None, None, :-1]).astype(jnp.int32)  # [BB,128,G]
+    ids = jnp.clip(ge.sum(-1) - 1, 0, n_groups - 1)
+    ids_ref[...] = ids.astype(jnp.int32)
+
+    onehot = (ids[:, :, None] == jax.lax.broadcasted_iota(jnp.int32, (1, 1, n_groups), 2)).astype(jnp.int32)
+    partial_hist = onehot.sum((0, 1))  # [G]
+
+    @pl.when(i == 0)
+    def _():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    hist_ref[...] += partial_hist
+
+
+@partial(jax.jit, static_argnames=("n_groups", "block_rows", "interpret"))
+def group_hist(x: jax.Array, edges: jax.Array, *, n_groups: int,
+               block_rows: int = 256, interpret: bool = True):
+    """x: [N, 128] float32; edges: [G+1] -> (ids [N,128] int32, hist [G] int32)."""
+    N = x.shape[0]
+    bb = min(block_rows, N)
+    assert N % bb == 0, (N, bb)
+    G = n_groups
+    ids, hist = pl.pallas_call(
+        partial(_kernel, n_groups=G),
+        grid=(N // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, 128), lambda i: (i, 0)),
+            pl.BlockSpec((G + 1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, 128), lambda i: (i, 0)),
+            pl.BlockSpec((G,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, 128), jnp.int32),
+            jax.ShapeDtypeStruct((G,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, edges)
+    return ids, hist

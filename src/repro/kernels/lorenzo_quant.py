@@ -1,0 +1,71 @@
+"""Fused prequantize + 3D Lorenzo stencil Pallas kernel.
+
+TPU design (DESIGN.md §3.1): the grid walks z-slabs in order; each step holds
+one [BZ, Y, X] slab in VMEM, computes q = rint(x / 2eb) and the three
+directional differences entirely on the VPU, and carries the slab's last
+q-plane to the next step in VMEM scratch (TPU grid steps are sequential, so
+the carry is exact — no halo reloads from HBM).  y/x boundaries are real
+volume boundaries because those axes are kept at full extent per slab.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _shift_zero(a: jax.Array, axis: int) -> jax.Array:
+    """roll-by-one with a zero boundary row (iota+where, TPU-safe)."""
+    rolled = jnp.roll(a, 1, axis=axis)
+    pos = jax.lax.broadcasted_iota(jnp.int32, a.shape, axis)
+    return jnp.where(pos == 0, jnp.zeros_like(a), rolled)
+
+
+def _kernel(x_ref, codes_ref, carry_ref, *, two_eb: float):
+    i = pl.program_id(0)
+    x = x_ref[...]
+    # divide (not multiply-by-reciprocal): must round identically to the
+    # production quantizer at .5 ties
+    q = jnp.rint(x / two_eb)  # f32 grid values (exact for |q| < 2^24)
+
+    prev = jnp.where(i == 0, jnp.zeros_like(carry_ref[...]), carry_ref[...])  # [1, Y, X]
+    carry_ref[...] = q[-1:, :, :]
+
+    # z-difference with cross-slab carry
+    qz_shift = jnp.roll(q, 1, axis=0)
+    pos_z = jax.lax.broadcasted_iota(jnp.int32, q.shape, 0)
+    qz_shift = jnp.where(pos_z == 0, jnp.broadcast_to(prev, q.shape), qz_shift)
+    d = q - qz_shift
+    # y and x differences (full-extent axes -> zero boundary is the real one)
+    d = d - _shift_zero(d, 1)
+    d = d - _shift_zero(d, 2)
+    codes_ref[...] = d.astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("eb", "block_z", "interpret"))
+def lorenzo_quant(x: jax.Array, eb: float, *, block_z: int = 8, interpret: bool = True) -> jax.Array:
+    """x: [Z, Y, X] float32 -> int32 Lorenzo codes (cuSZ-style prequantized).
+
+    VMEM budget: (1 input + 1 output + carry) * BZ*Y*X*4B; BZ=8 with 512^2
+    planes is ~16 MB -> choose block_z to fit (benchmarks sweep this).
+    """
+    Z, Y, X = x.shape
+    bz = min(block_z, Z)
+    assert Z % bz == 0, (Z, bz)
+    return pl.pallas_call(
+        partial(_kernel, two_eb=float(2.0 * eb)),
+        grid=(Z // bz,),
+        in_specs=[pl.BlockSpec((bz, Y, X), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((bz, Y, X), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Z, Y, X), jnp.int32),
+        scratch_shapes=[_vmem((1, Y, X), jnp.float32)],
+        interpret=interpret,
+    )(x)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

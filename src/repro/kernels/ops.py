@@ -1,0 +1,53 @@
+"""Dispatch layer: Pallas kernels on TPU, jnp reference on other backends.
+
+``use_pallas=None`` auto-detects; the CPU dry-run path always lowers the pure
+JAX reference (Pallas TPU kernels can't lower on the host platform), while
+tests exercise the kernels in interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.enhancer_fused import enhancer_fused
+from repro.kernels.group_hist import group_hist
+from repro.kernels.lorenzo_quant import lorenzo_quant
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def lorenzo_quant_op(x, eb, *, use_pallas: bool | None = None, interpret: bool | None = None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return lorenzo_quant(x, eb, interpret=not _on_tpu() if interpret is None else interpret)
+    return ref.lorenzo_quant_ref(x, eb)
+
+
+def enhancer_fused_op(x, params, bn_state, *, use_pallas: bool | None = None,
+                      interpret: bool | None = None):
+    """params/bn_state: single-group enhancer pytrees (no G axis)."""
+    args = (
+        x, params["w1"], params["b1"], params["gamma"], params["beta"],
+        bn_state["mean"], bn_state["var"], params["w2"], params["b2"],
+    )
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return enhancer_fused(*args, interpret=not _on_tpu() if interpret is None else interpret)
+    return ref.enhancer_fused_ref(*args)
+
+
+def group_hist_op(x, edges, *, n_groups: int, use_pallas: bool | None = None,
+                  interpret: bool | None = None):
+    """x: any shape with size % 128 == 0 (host pads); returns (ids, hist)."""
+    shape = x.shape
+    x2 = x.reshape(-1, 128)
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        ids, hist = group_hist(x2, edges, n_groups=n_groups,
+                               interpret=not _on_tpu() if interpret is None else interpret)
+    else:
+        ids, hist = ref.group_hist_ref(x2, edges)
+    return ids.reshape(shape), hist

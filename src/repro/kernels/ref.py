@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lorenzo_quant_ref(x: jax.Array, eb: float) -> jax.Array:
+    """Fused prequantize + 3D integer Lorenzo stencil (compression hot loop)."""
+    q = jnp.rint(x / (2.0 * jnp.asarray(eb, x.dtype))).astype(jnp.int32)
+    for ax in range(x.ndim):
+        shifted = jnp.roll(q, 1, axis=ax)
+        idx = [slice(None)] * q.ndim
+        idx[ax] = slice(0, 1)
+        shifted = shifted.at[tuple(idx)].set(0)
+        q = q - shifted
+    return q
+
+
+def enhancer_fused_ref(x: jax.Array, w1, b1, gamma, beta, mean, var, w2, b2) -> jax.Array:
+    """Conv3x3(1->C) + BN(inference) + ReLU + Conv3x3(C->1), zero-pad SAME.
+
+    x: [B, H, W]; returns [B, H, W]."""
+    from repro.core.enhancer import _conv
+
+    h = _conv(x[..., None], w1, b1)
+    h = (h - mean) * jax.lax.rsqrt(var + 1e-5) * gamma + beta
+    h = jax.nn.relu(h)
+    out = _conv(h, w2, b2)
+    return out[..., 0]
+
+
+def group_hist_ref(x: jax.Array, edges: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Group-id assignment + histogram. x: [N, 128]; edges: [G+1].
+
+    Returns (ids int32 [N,128], hist int32 [G])."""
+    G = edges.shape[0] - 1
+    ids = (x[..., None] >= edges[:-1]).sum(-1).astype(jnp.int32) - 1
+    ids = jnp.clip(ids, 0, G - 1)
+    hist = jnp.zeros((G,), jnp.int32).at[ids.ravel()].add(1)
+    return ids, hist

@@ -1,0 +1,392 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+# ^ MUST precede any jax import: jax locks the device count at first init.
+# The dry-run (and only the dry-run) builds the 512-chip production meshes
+# out of host placeholder devices; smoke tests and benches see 1 device.
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import math  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCH_IDS, build_model, get_family  # noqa: E402
+from repro.launch import hlowalk  # noqa: E402
+from repro.launch import sharding as SH  # noqa: E402
+from repro.launch.mesh import batch_axes_of, make_production_mesh  # noqa: E402
+from repro.launch.shapes import SHAPES, cell_applicable, input_specs  # noqa: E402
+from repro.launch.steps import TrainOptions, make_decode_step, make_prefill_step, make_train_step  # noqa: E402
+from repro.optim import adamw  # noqa: E402
+
+# Per-arch defaults chosen for the memory envelope (16 GB HBM / v5e chip).
+# These are the *baseline* settings; §Perf hillclimbs override via --set.
+ARCH_TRAIN_DEFAULTS: dict[str, dict] = {
+    "llama3-405b": dict(fsdp=True, microbatch=16, moment_dtype="bf16"),
+    "deepseek-v3-671b": dict(fsdp=True, microbatch=16, moment_dtype="int8"),
+    "llama4-scout-17b-a16e": dict(fsdp=True, microbatch=4, moment_dtype="bf16"),
+    "granite-3-8b": dict(fsdp=True, microbatch=1),
+    "yi-9b": dict(fsdp=True, microbatch=1),
+    "qwen2-vl-7b": dict(fsdp=True, microbatch=1),
+    "rwkv6-7b": dict(fsdp=True, microbatch=1),
+}
+# decode cells: sequence-shard global KV caches over "model" (flash-decode);
+# long_500k batch=1 shards sequence over "data" too.
+ARCH_DECODE_SEQ_AXIS = {"decode_32k": "model", "long_500k": "data"}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\S+))\s+(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|u32|s16|u16|s8|u8|pred|s64|u64)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\}|replica_groups=\[(\d+),(\d+)\]")
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+                "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo: str) -> list[dict]:
+    """Sum result-shape bytes of every collective op (post-SPMD HLO)."""
+    out = []
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_txt, kind = m.groups()
+        nbytes = _shape_bytes(shape_txt)
+        g = 1
+        gm = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+        if gm:
+            g = int(gm.group(2))
+        else:
+            gm = re.search(r"replica_groups=\{\{(.*?)\}", line)
+            if gm:
+                g = len(gm.group(1).split(","))
+        out.append({"kind": kind, "bytes": nbytes, "group": g})
+    return out
+
+
+def wire_bytes(colls: list[dict]) -> float:
+    """Per-device ICI bytes using ring formulas."""
+    total = 0.0
+    for c in colls:
+        g, b = max(c["group"], 1), c["bytes"]
+        if g <= 1:
+            continue
+        if c["kind"] == "all-reduce":
+            total += 2.0 * (g - 1) / g * b
+        elif c["kind"] == "all-gather":
+            total += (g - 1) / g * b
+        elif c["kind"] == "reduce-scatter":
+            total += (g - 1) * b  # result bytes are already 1/g of the input
+        elif c["kind"] == "all-to-all":
+            total += (g - 1) / g * b
+        else:  # collective-permute
+            total += b
+    return total
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(tree))
+
+
+def active_param_fraction(cfg) -> float:
+    """MoE: fraction of routed-expert params active per token."""
+    if cfg.moe is None:
+        return 1.0
+    return cfg.moe.top_k / cfg.moe.n_experts
+
+
+def sharded_bytes(tree, spec_tree, mesh) -> int:
+    """Static per-device bytes given the sharding specs."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(leaf, spec):
+        b = int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+        denom = 1
+        for ax in spec:
+            if ax is None:
+                continue
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                denom *= sizes.get(a, 1)
+        return b // max(denom, 1)
+
+    leaves = jax.tree_util.tree_leaves(tree)
+    specs = jax.tree_util.tree_leaves(spec_tree, is_leaf=lambda s: isinstance(s, P))
+    assert len(leaves) == len(specs), (len(leaves), len(specs))
+    return sum(one(l, s) for l, s in zip(leaves, specs))
+
+
+def lower_gwlz_cell(multi_pod: bool, *, overrides: dict | None = None) -> dict:
+    """The paper's own technique on the production mesh: group-wise enhancer
+    training over a 512^3 Nyx volume (groups -> model axis, slices -> data)."""
+    from repro.launch import gwlz_dist as GD
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    kw = dict(grad_compress=False)
+    if overrides:
+        kw.update({k: v for k, v in overrides.items() if k in ("grad_compress", "n_groups", "batch_slices")})
+    dcfg = GD.DistGWLZConfig(**kw)
+    step, state_sh, batch_sh = GD.make_dist_train_step(dcfg, mesh)
+    state_sds = jax.eval_shape(lambda: GD.build_state(dcfg))
+    batch_sds = GD.input_specs(dcfg)
+
+    t0 = time.time()
+    jitted = jax.jit(step, in_shardings=(state_sh(state_sds), batch_sh(batch_sds)))
+    with mesh:
+        lowered = jitted.lower(state_sds, batch_sds)
+    info = {
+        "arch": "gwlz-nyx", "shape": "vol512_g32", "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": int(np.prod(mesh.devices.shape)),
+        "settings": kw,
+        "n_params": count_params(state_sds["params"]),
+        "active_fraction": 1.0,
+        "lower_s": round(time.time() - t0, 2),
+    }
+    t1 = time.time()
+    compiled = lowered.compile()
+    info["compile_s"] = round(time.time() - t1, 2)
+    try:
+        ca = compiled.cost_analysis()
+        info["cost_analysis"] = {k: float(v) for k, v in ca.items()
+                                 if isinstance(v, (int, float)) and k in ("flops", "bytes accessed")}
+    except Exception as e:
+        info["cost_analysis"] = {"error": str(e)}
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo)
+    agg: dict[str, dict] = {}
+    for c in colls:
+        a = agg.setdefault(c["kind"], {"count": 0, "bytes": 0})
+        a["count"] += 1
+        a["bytes"] += c["bytes"]
+    info["collectives"] = agg
+    info["wire_bytes_per_dev"] = wire_bytes(colls)
+    try:
+        info["walked"] = hlowalk.walk(hlo)
+    except Exception as e:  # pragma: no cover
+        info["walked"] = {"error": f"{type(e).__name__}: {e}"}
+    info["ntokens"] = dcfg.batch_slices * dcfg.volume * dcfg.volume  # voxels/step
+    info["static_bytes_per_dev"] = 0
+    info["hlo_bytes"] = len(hlo)
+    info["_hlo"] = hlo
+    return info
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool, *, overrides: dict | None = None,
+               reduced: bool = False) -> dict:
+    if arch == "gwlz-nyx":
+        return lower_gwlz_cell(multi_pod, overrides=overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    baxes = batch_axes_of(mesh)
+    spec = input_specs(arch, shape, reduced=reduced)
+    cfg, cell = spec["cfg"], spec["cell"]
+    model, _ = build_model(arch, reduced=reduced)
+    fam = get_family(arch)
+
+    t0 = time.time()
+    params_sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+    train_kw = dict(ARCH_TRAIN_DEFAULTS.get(arch, {}))
+    if overrides:
+        train_kw.update({k: v for k, v in overrides.items() if k in ("fsdp", "microbatch", "moment_dtype")})
+    seq_axis = ARCH_DECODE_SEQ_AXIS.get(shape)
+    if overrides and "seq_axis" in overrides:
+        seq_axis = overrides["seq_axis"]
+    sh_opts = SH.ShardingOptions(fsdp=bool(train_kw.get("fsdp", False)), seq_axis=seq_axis)
+
+    pspecs = SH.param_pspecs(params_sds, sh_opts, mesh)
+    p_shard = SH.named(mesh, pspecs)
+
+    ax_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_b = 1
+    for a in baxes:
+        n_b *= ax_sizes[a]
+
+    def bspec(leaf_name, leaf):
+        if leaf.ndim == 0 or leaf.shape[0] % n_b != 0:
+            return P(*([None] * leaf.ndim))
+        return P(baxes, *([None] * (leaf.ndim - 1)))
+
+    batch_sds = spec["batch"]
+    batch_specs = {k: bspec(k, v) for k, v in batch_sds.items()}
+    b_shard = {k: NamedSharding(mesh, s) for k, s in batch_specs.items()}
+
+    info: dict = {
+        "arch": arch, "shape": shape, "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": int(np.prod(mesh.devices.shape)),
+        "settings": {**train_kw, "seq_axis": seq_axis},
+        "n_params": count_params(params_sds),
+        "active_fraction": active_param_fraction(cfg),
+    }
+
+    if cell.kind == "train":
+        opts = TrainOptions(**{k: v for k, v in train_kw.items() if k in ("moment_dtype", "fsdp", "microbatch")})
+        gp = pspecs if (overrides or {}).get("grad_rs") else None
+        step, adam_cfg = make_train_step(model, cfg, opts, mesh, grad_pspecs=gp)
+        opt_sds = jax.eval_shape(lambda: adamw.init(params_sds, adam_cfg))
+        o_specs = SH.opt_pspecs(opt_sds, pspecs, sh_opts, mesh)
+        o_shard = SH.named(mesh, o_specs)
+        rng_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        jitted = jax.jit(
+            lambda p, o, b, r: step(p, o, b, r),
+            in_shardings=(p_shard, o_shard, b_shard, NamedSharding(mesh, P())),
+            out_shardings=(p_shard, o_shard, NamedSharding(mesh, P())),
+        )
+        with mesh:  # ambient mesh: bare-P activation constraints resolve
+            lowered = jitted.lower(params_sds, opt_sds, batch_sds, rng_sds)
+        info["static_bytes_per_dev"] = (
+            sharded_bytes(params_sds, pspecs, mesh)
+            + sharded_bytes(opt_sds["m"], jax.tree.map(lambda s: s, o_specs["m"], is_leaf=lambda s: isinstance(s, P)), mesh)
+            + sharded_bytes(opt_sds["v"], o_specs["v"], mesh)
+        )
+        ntokens = cell.global_batch * cell.seq_len
+    elif cell.kind == "prefill":
+        step = make_prefill_step(model, cfg, mesh)
+        jitted = jax.jit(step, in_shardings=(p_shard, b_shard))
+        with mesh:
+            lowered = jitted.lower(params_sds, batch_sds)
+        info["static_bytes_per_dev"] = sharded_bytes(params_sds, pspecs, mesh)
+        ntokens = cell.global_batch * cell.seq_len
+    else:  # decode
+        ctx = spec["ctx"]
+        B = batch_sds["token"].shape[0]
+        cache_sds = jax.eval_shape(lambda: model.init_cache(B, ctx))
+        c_specs = SH.cache_pspecs(cache_sds, mesh, sh_opts)
+        c_shard = SH.named(mesh, c_specs)
+        step = make_decode_step(model, cfg, mesh)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, c_shard, b_shard),
+            out_shardings=(NamedSharding(mesh, P()), c_shard),
+        )
+        with mesh:
+            lowered = jitted.lower(params_sds, cache_sds, batch_sds)
+        info["static_bytes_per_dev"] = (
+            sharded_bytes(params_sds, pspecs, mesh) + sharded_bytes(cache_sds, c_specs, mesh)
+        )
+        ntokens = cell.global_batch  # one token per sequence
+    info["lower_s"] = round(time.time() - t0, 2)
+
+    t1 = time.time()
+    compiled = lowered.compile()
+    info["compile_s"] = round(time.time() - t1, 2)
+
+    try:
+        ca = compiled.cost_analysis()
+        info["cost_analysis"] = {k: float(v) for k, v in ca.items()
+                                 if isinstance(v, (int, float)) and k in ("flops", "bytes accessed", "transcendentals")}
+    except Exception as e:  # pragma: no cover
+        info["cost_analysis"] = {"error": str(e)}
+    try:
+        ma = compiled.memory_analysis()
+        info["memory_analysis"] = {
+            k: int(getattr(ma, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(ma, k)
+        }
+    except Exception as e:  # pragma: no cover
+        info["memory_analysis"] = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo)
+    agg: dict[str, dict] = {}
+    for c in colls:
+        a = agg.setdefault(c["kind"], {"count": 0, "bytes": 0})
+        a["count"] += 1
+        a["bytes"] += c["bytes"]
+    info["collectives"] = agg
+    info["wire_bytes_per_dev"] = wire_bytes(colls)
+    try:
+        info["walked"] = hlowalk.walk(hlo)  # trip-count-aware flops/collectives
+    except Exception as e:  # pragma: no cover
+        info["walked"] = {"error": f"{type(e).__name__}: {e}"}
+    info["ntokens"] = ntokens
+    info["hlo_bytes"] = len(hlo)
+    info["_hlo"] = hlo
+    return info
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run: lower+compile every cell")
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape cell or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--reduced", action="store_true", help="reduced configs (CI smoke)")
+    ap.add_argument("--set", nargs="*", default=[], help="override k=v (fsdp/microbatch/moment_dtype/seq_axis)")
+    ap.add_argument("--tag", default="", help="suffix for output files (perf experiments)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = {"true": True, "false": False}.get(v.lower(), v)
+        if isinstance(overrides[k], str) and overrides[k].isdigit():
+            overrides[k] = int(overrides[k])
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    if args.arch == "gwlz-nyx":
+        shapes = ["vol512_g32"]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            ok, why = (True, "") if arch == "gwlz-nyx" else cell_applicable(arch, shape)
+            for multi in meshes:
+                mesh_tag = "multi" if multi else "single"
+                name = f"{arch}_{shape}_{mesh_tag}{args.tag}"
+                path = os.path.join(args.out, name + ".json")
+                if not ok:
+                    json.dump({"arch": arch, "shape": shape, "mesh": mesh_tag,
+                               "skipped": why}, open(path, "w"), indent=1)
+                    print(f"SKIP {name}: {why}", flush=True)
+                    continue
+                if os.path.exists(path) and not overrides and not args.tag:
+                    print(f"CACHED {name}", flush=True)
+                    continue
+                try:
+                    info = lower_cell(arch, shape, multi, overrides=overrides, reduced=args.reduced)
+                    hlo = info.pop("_hlo", None)
+                    if hlo is not None:
+                        import zlib as _z
+                        with open(path.replace(".json", ".hlo.z"), "wb") as f:
+                            f.write(_z.compress(hlo.encode(), 6))
+                    json.dump(info, open(path, "w"), indent=1)
+                    ca = info.get("cost_analysis", {})
+                    print(
+                        f"OK {name}: compile={info['compile_s']}s "
+                        f"flops={ca.get('flops', float('nan')):.3g} "
+                        f"static={info['static_bytes_per_dev']/2**30:.2f}GiB "
+                        f"wire={info['wire_bytes_per_dev']/2**30:.3f}GiB",
+                        flush=True,
+                    )
+                except Exception as e:
+                    failures += 1
+                    json.dump({"arch": arch, "shape": shape, "mesh": mesh_tag,
+                               "error": f"{type(e).__name__}: {e}",
+                               "traceback": traceback.format_exc()}, open(path, "w"), indent=1)
+                    print(f"FAIL {name}: {type(e).__name__}: {e}", flush=True)
+    print(f"done; failures={failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

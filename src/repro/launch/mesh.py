@@ -1,0 +1,27 @@
+"""Production mesh construction (DESIGN.md §5).
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — the dry-run sets
+``--xla_force_host_platform_device_count=512`` before any jax import and only
+then calls these.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) = one v5e pod of 256 chips; (2, 16, 16) = two pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for smoke tests / examples on the CPU container."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def batch_axes_of(mesh) -> tuple[str, ...]:
+    """Mesh axes that carry data parallelism."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,156 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape x mesh) cell, all in seconds per step:
+
+  compute    = FLOPs_per_device / PEAK_FLOPS
+  memory     = HBM_bytes_per_device / HBM_BW
+  collective = wire_bytes_per_device / ICI_BW
+
+FLOPs come from the trip-count-aware HLO walk (launch/hlowalk — XLA's
+cost_analysis counts scan bodies once); wire bytes likewise.  HBM bytes are
+the analytic traffic model below (params/opt-state/cache/activation streams),
+since XLA CPU gives no per-device HBM model.  MODEL_FLOPS = 6·N·D (active N
+for MoE) is reported against walked FLOPs to expose remat/redundancy waste.
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (brief-specified constants).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def analytic_hbm_bytes(info: dict) -> float:
+    """Per-device HBM traffic per step (streaming model).
+
+    train:   3x param stream (fwd read, bwd read, update write) + opt state
+             read+write + activation boundary traffic (scan+remat: one bf16
+             activation per layer boundary written fwd and read bwd).
+    decode:  params once + full cache read + cache write (1 token).
+    prefill: params once + activation stream.
+    """
+    static = info.get("static_bytes_per_dev", 0)
+    shape = info["shape"]
+    if shape.startswith("train") or shape.startswith("vol"):
+        return 5.0 * static  # 3x params + ~2x opt state, activations folded in
+    return 1.2 * static  # params + cache streamed ~once
+
+
+def model_flops(info: dict) -> float:
+    """6·N·D with active-N for MoE; decode D = new tokens only."""
+    n = info["n_params"] * info.get("active_fraction", 1.0)
+    d = info["ntokens"]
+    mult = 6.0 if (info["shape"].startswith("train") or info["shape"].startswith("vol")) else 2.0
+    return mult * n * d
+
+
+def load_cells(out_dir: str, tag: str = "", rewalk: bool = True) -> list[dict]:
+    """Load cell JSONs; recompute the HLO walk from the .hlo.z sidecar when
+    present so walker improvements apply without recompiling."""
+    cells = []
+    for path in sorted(glob.glob(os.path.join(out_dir, f"*{tag}.json"))):
+        stem = os.path.basename(path)[: -len(".json")]
+        if not tag and not (stem.endswith("_single") or stem.endswith("_multi")):
+            continue  # tagged perf-experiment file; not part of the baseline table
+        info = json.load(open(path))
+        info["_file"] = os.path.basename(path)
+        sidecar = path.replace(".json", ".hlo.z")
+        if rewalk and os.path.exists(sidecar) and "error" not in info and "skipped" not in info:
+            import zlib
+
+            from repro.launch import hlowalk
+
+            try:
+                hlo = zlib.decompress(open(sidecar, "rb").read()).decode()
+                info["walked"] = hlowalk.walk(hlo)
+            except Exception as e:  # pragma: no cover
+                info.setdefault("walked", {})["rewalk_error"] = str(e)
+        cells.append(info)
+    return cells
+
+
+def analyse(info: dict) -> dict | None:
+    if "skipped" in info or "error" in info:
+        return None
+    dev = info["devices"]
+    walked = info.get("walked", {})
+    # the optimized HLO module IS the per-device program: walked numbers are
+    # already per-device.
+    flops_dev = walked.get("flops", float("nan"))
+    wire_dev = walked.get("wire_bytes", info.get("wire_bytes_per_dev", 0.0))
+    hbm = analytic_hbm_bytes(info)
+    t_comp = flops_dev / PEAK_FLOPS
+    t_mem = hbm / HBM_BW
+    t_coll = wire_dev / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=lambda k: terms[k] if terms[k] == terms[k] else -1)
+    mf = model_flops(info)  # global 6ND
+    useful = (mf / dev) / flops_dev if flops_dev else float("nan")
+    bound = max(terms.values())
+    frac = (mf / dev / PEAK_FLOPS) / bound if bound > 0 else float("nan")
+    return {
+        "arch": info["arch"], "shape": info["shape"], "mesh": info["mesh"],
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dom,
+        "model_flops": mf, "walked_flops": walked.get("flops"),
+        "useful_fraction": useful,
+        "roofline_fraction": frac,  # useful work / dominant-term time
+        "static_GiB": info.get("static_bytes_per_dev", 0) / 2**30,
+        "fits_16GiB": info.get("static_bytes_per_dev", 0) < 14 * 2**30,
+        "settings": info.get("settings", {}),
+    }
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | dominant "
+           "| 6ND/HLO | roofline-frac | static GiB | fits |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['t_compute_s']:.3e} "
+            f"| {r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_fraction']:.2f} | {r['roofline_fraction']:.2f} "
+            f"| {r['static_GiB']:.2f} | {'Y' if r['fits_16GiB'] else 'N'} |\n"
+        )
+    return "".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--mesh", default="16x16", help="16x16 | 2x16x16 | all")
+    ap.add_argument("--json-out", default="")
+    args = ap.parse_args()
+    rows = []
+    skips = []
+    for info in load_cells(args.dir, args.tag):
+        if "skipped" in info:
+            skips.append((info["arch"], info["shape"], info["mesh"], info["skipped"]))
+            continue
+        if "error" in info:
+            skips.append((info["arch"], info["shape"], info.get("mesh", "?"), "ERROR " + info["error"]))
+            continue
+        r = analyse(info)
+        if r and (args.mesh == "all" or r["mesh"] == args.mesh):
+            rows.append(r)
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print(markdown_table(rows))
+    if skips:
+        print("\nSkipped/failed cells:")
+        for s in sorted(set(skips)):
+            print(f"- {s[0]} / {s[1]} / {s[2]}: {s[3]}")
+    if args.json_out:
+        json.dump(rows, open(args.json_out, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

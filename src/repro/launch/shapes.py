@@ -1,0 +1,70 @@
+"""Input-shape cells (assigned per-arch) and ShapeDtypeStruct builders.
+
+Every cell resolves to (step_kind, ShapeDtypeStruct pytree) — weak-type
+correct, shardable, zero allocation (the pattern the dry-run lowers from).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_family, long_context_ok
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_applicable(arch: str, shape: str) -> tuple[bool, str]:
+    """long_500k only for sub-quadratic archs (DESIGN.md §4)."""
+    if shape == "long_500k" and not long_context_ok(arch):
+        return False, "pure full attention at 500k context — skipped per brief"
+    return True, ""
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(arch: str, shape: str, *, reduced: bool = False) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cell = SHAPES[shape]
+    cfg = get_config(arch, reduced=reduced)
+    fam = get_family(arch)
+    B, S = cell.global_batch, cell.seq_len
+    if reduced:
+        B, S = max(B // 64, 1), min(S, 64)
+
+    mrope = cfg.attn is not None and cfg.attn.mrope_sections is not None
+
+    if cell.kind in ("train", "prefill"):
+        batch = {
+            "tokens": sds((B, S), jnp.int32),
+        }
+        if cell.kind == "train":
+            batch["targets"] = sds((B, S), jnp.int32)
+        if mrope:
+            batch["positions"] = sds((B, 3, S), jnp.int32)
+        if fam == "encdec":
+            batch["enc_feats"] = sds((B, cfg.enc_seq, cfg.d_model), cfg.compute_dtype)
+        return {"batch": batch, "cell": cell, "cfg": cfg}
+
+    # decode: one new token against a ctx-length cache
+    batch = {"token": sds((B, 1), jnp.int32), "pos": sds((), jnp.int32)}
+    if fam == "encdec":
+        batch["enc_out"] = sds((B, cfg.enc_seq, cfg.d_model), cfg.compute_dtype)
+    return {"batch": batch, "cell": cell, "cfg": cfg, "ctx": S}

@@ -1,0 +1,142 @@
+"""Step-function builders: train_step / prefill_step / decode_step per arch.
+
+These are the functions the dry-run lowers and the drivers execute.  All are
+pure (params, opt_state, batch) -> outputs, jit/pjit-friendly, with sharding
+expressed through in_shardings at the jit boundary plus internal constraints.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.mesh import batch_axes_of
+from repro.optim import AdamWConfig, adamw  # noqa: F401  (adamw via package)
+from repro.optim import schedule as sched
+import repro.optim.adamw as adamw_mod
+
+
+@dataclass(frozen=True)
+class TrainOptions:
+    lr: float = 3e-4
+    warmup: int = 2000
+    total_steps: int = 100_000
+    moment_dtype: str = "bf16"
+    fsdp: bool = False
+    microbatch: int = 1          # gradient-accumulation chunks
+    param_dtype: str = "fp32"    # master params
+
+
+def _positions_for(cfg, B, S):
+    if cfg.attn is not None and cfg.attn.mrope_sections is not None:
+        return None  # provided in the batch (3-stream M-RoPE)
+    return jnp.arange(S)
+
+
+def make_train_step(model, cfg, opts: TrainOptions, mesh=None, grad_pspecs=None):
+    """Returns train_step(params, opt_state, batch, rng) -> (params, opt, metrics).
+
+    ``grad_pspecs``: PartitionSpec tree for gradients. When microbatching,
+    the accumulator is constrained to these specs so each microbatch's
+    contribution is reduce-scattered into the (FSDP-sharded) accumulator
+    instead of all-reduced to a replicated tree — see EXPERIMENTS.md §Perf
+    (llama3-405b cell: the dominant collective term).
+    """
+    adam_cfg = AdamWConfig(weight_decay=0.1, moment_dtype=opts.moment_dtype)
+    lr_fn = sched.warmup_cosine(opts.lr, opts.warmup, opts.total_steps)
+    baxes = batch_axes_of(mesh) if mesh is not None else None
+    is_encdec = getattr(model, "cfg", cfg).enc_layers > 0
+
+    def lossfn(params, batch):
+        if is_encdec:
+            return model.loss(params, batch["enc_feats"], batch["tokens"], batch["targets"], batch_axes=baxes)
+        pos = batch.get("positions")
+        if pos is None:
+            pos = _positions_for(cfg, *batch["tokens"].shape)
+        return model.loss(params, batch["tokens"], batch["targets"], pos, batch_axes=baxes)
+
+    def train_step(params, opt_state, batch, rng):
+        M = opts.microbatch
+        if M <= 1:
+            (loss, aux), grads = jax.value_and_grad(lossfn, has_aux=True)(params, batch)
+        else:
+            def mb(carry, mbatch):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(lossfn, has_aux=True)(params, mbatch)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                if grad_pspecs is not None:
+                    from repro.models.common import shard_constraint
+
+                    g_acc = jax.tree.map(
+                        lambda t, sp: shard_constraint(t, sp), g_acc, grad_pspecs,
+                        is_leaf=lambda t: hasattr(t, "shape"),
+                    )
+                return (g_acc, l_acc + l), None
+
+            def resplit(t):
+                # [B, ...] -> [M, B/M, ...] with the *inner* batch dim sharded
+                # over data (each microbatch spans all devices).
+                t = t.reshape(M, t.shape[0] // M, *t.shape[1:])
+                if baxes is not None:
+                    from repro.models.common import shard_constraint
+                    from jax.sharding import PartitionSpec as P
+
+                    t = shard_constraint(t, P(None, baxes, *([None] * (t.ndim - 2))))
+                return t
+
+            split = jax.tree.map(resplit, batch)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(mb, (zeros, jnp.zeros(())), split)
+            grads = jax.tree.map(lambda g: g / M, grads)
+            loss = loss / M
+        lr = lr_fn(opt_state["step"])
+        params, opt_state = adamw_mod.update(params, opt_state, grads, lr, adam_cfg, rng)
+        return params, opt_state, {"loss": loss, "lr": lr}
+
+    return train_step, adam_cfg
+
+
+def make_prefill_step(model, cfg, mesh=None):
+    """Forward over the full prompt; returns last-position logits.
+
+    (Cache materialization is omitted in the dry-run cell — identical FLOPs,
+    see EXPERIMENTS.md §Dry-run notes.)"""
+    baxes = batch_axes_of(mesh) if mesh is not None else None
+    is_encdec = cfg.enc_layers > 0
+
+    def prefill_step(params, batch):
+        if is_encdec:
+            enc_out = model.encode(params, batch["enc_feats"], batch_axes=baxes)
+            pos = jnp.arange(batch["tokens"].shape[1])
+            logits, _ = model.decode(params, enc_out, batch["tokens"], pos, batch_axes=baxes)
+            return logits[:, -1]
+        pos = batch.get("positions")
+        if pos is None:
+            pos = jnp.arange(batch["tokens"].shape[1])
+        logits, _, _ = model.apply(params, batch["tokens"], pos, batch_axes=baxes)
+        return logits[:, -1]
+
+    return prefill_step
+
+
+def make_decode_step(model, cfg, mesh=None):
+    """One new token against a pre-filled KV/state cache."""
+    baxes = batch_axes_of(mesh) if mesh is not None else None
+    is_encdec = cfg.enc_layers > 0
+
+    if is_encdec:
+        def decode_step(params, cache, batch):
+            logits, cache = model.decode_step(
+                params, cache, batch["enc_out"], batch["token"], batch["pos"], batch_axes=baxes
+            )
+            return logits, cache
+    else:
+        def decode_step(params, cache, batch):
+            logits, cache = model.decode_step(
+                params, cache, batch["token"], batch["pos"], batch_axes=baxes
+            )
+            return logits, cache
+
+    return decode_step

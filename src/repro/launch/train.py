@@ -1,0 +1,96 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [--reduced]``.
+
+Production path: builds the assigned architecture, a deterministic token
+pipeline, the jitted train step, and runs it under the ResilientLoop
+(heartbeats + async checkpoints + restore-on-failure).  On this CPU container
+use ``--reduced`` (the full configs only lower via dryrun.py).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import ARCH_IDS, build_model, get_family
+from repro.data.tokens import TokenPipeline, TokenPipelineConfig
+from repro.launch.steps import TrainOptions, make_train_step
+from repro.optim import adamw
+from repro.runtime.fault import FailureInjector, HeartbeatMonitor, ResilientLoop
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b", choices=list(ARCH_IDS))
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--moment-dtype", default="fp32", choices=["fp32", "bf16", "int8"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--gwlz-ckpt-eb", type=float, default=None,
+                    help="rel error bound for GWLZ-compressed checkpoints")
+    ap.add_argument("--inject-failure-at", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    model, cfg = build_model(args.arch, reduced=args.reduced)
+    fam = get_family(args.arch)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    n_params = sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
+    print(f"arch={cfg.name} params={n_params:,}")
+
+    opts = TrainOptions(lr=args.lr, warmup=max(args.steps // 10, 1),
+                        total_steps=args.steps, moment_dtype=args.moment_dtype)
+    step_fn, adam_cfg = make_train_step(model, cfg, opts, mesh=None)
+    opt_state = adamw.init(params, adam_cfg)
+
+    pipe = TokenPipeline(TokenPipelineConfig(cfg.vocab, args.batch, args.seq, seed=args.seed))
+    mrope = cfg.attn is not None and cfg.attn.mrope_sections is not None
+
+    def batch_fn(step):
+        b = pipe.batch_at(step)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        if mrope:
+            pos = jnp.broadcast_to(jnp.arange(args.seq)[None, None, :],
+                                   (args.batch, 3, args.seq)).astype(jnp.int32)
+            batch["positions"] = pos
+        if fam == "encdec":
+            rng = np.random.default_rng(step)
+            batch["enc_feats"] = jnp.asarray(
+                rng.normal(size=(args.batch, cfg.enc_seq, cfg.d_model)).astype(np.float32),
+                cfg.compute_dtype)
+        return batch
+
+    jstep = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    def loop_step(state, batch):
+        params, opt_state, rng = state
+        rng, sub = jax.random.split(rng)
+        params, opt_state, metrics = jstep(params, opt_state, batch, sub)
+        return (params, opt_state, rng), metrics
+
+    manager = CheckpointManager(args.ckpt_dir, gwlz_rel_eb=args.gwlz_ckpt_eb)
+    monitor = HeartbeatMonitor(n_workers=1)
+    injector = (FailureInjector({args.inject_failure_at})
+                if args.inject_failure_at is not None else None)
+    loop = ResilientLoop(loop_step, batch_fn, manager, ckpt_every=args.ckpt_every)
+
+    state = (params, opt_state, jax.random.PRNGKey(args.seed + 1))
+    t0 = time.time()
+    state, metrics_log, restarts = loop.run(state, args.steps, injector=injector, monitor=monitor)
+    dt = time.time() - t0
+    losses = [float(m["loss"]) for m in metrics_log]
+    toks = args.steps * args.batch * args.seq
+    print(f"steps={args.steps} restarts={restarts} loss[0]={losses[0]:.3f} "
+          f"loss[-1]={losses[-1]:.3f} tokens/s={toks/dt:,.0f} stragglers={monitor.stragglers()}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.models.decoder import DecoderLM, LayerSpec, ModelConfig
+from repro.models.encdec import EncDecLM
+
+__all__ = ["DecoderLM", "EncDecLM", "LayerSpec", "ModelConfig"]

@@ -1,0 +1,352 @@
+"""Attention variants for the assigned architectures.
+
+One code path covers: full causal (granite/yi/llama3/qwen2-vl/whisper-dec),
+sliding-window (gemma3 5:1 local:global), chunked-local + NoPE-global
+(llama4 iRoPE), cross-attention (whisper), and MLA latent attention
+(deepseek-v3) with the absorbed decode form.
+
+Masks are built lazily from position iotas inside each query block — never a
+materialized [S, S] tensor — so prefill_32k fits and FLOPs stay honest.
+Mask modes: 0 = full causal, 1 = sliding window, 2 = chunked local,
+3 = bidirectional (encoder / cross).
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import apply_mrope, apply_rope, shard_constraint
+
+MASK_CAUSAL, MASK_SLIDING, MASK_CHUNKED, MASK_BIDIR = 0, 1, 2, 3
+
+# O(S*w) banded attention for sliding/chunked layers (vs lazily-masked O(S^2)).
+# Default ON; REPRO_BANDED_ATTN=0 reproduces the pre-optimization baseline
+# recorded in EXPERIMENTS.md §Perf.
+BANDED_DEFAULT = os.environ.get("REPRO_BANDED_ATTN", "1") == "1"
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    q_lora: int = 1536
+    kv_lora: int = 512
+    rope_dim: int = 64
+    nope_dim: int = 128
+    v_dim: int = 128
+
+
+@dataclass(frozen=True)
+class AttnConfig:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_model: int
+    rope_theta: float = 1e4
+    qk_norm: bool = False
+    mla: Optional[MLAConfig] = None
+    mrope_sections: Optional[tuple[int, ...]] = None
+    mrope_theta: float = 1e6
+    softcap: float = 0.0  # gemma-style logit softcapping (0 = off)
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+
+def init_gqa_params(key, cfg: AttnConfig, dtype=jnp.float32) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(k1, (d, H, hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(k2, (d, K, hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(k3, (d, K, hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(k4, (H, hd, d)) * (H * hd) ** -0.5).astype(dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def init_mla_params(key, cfg: AttnConfig, dtype=jnp.float32) -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 7)
+    s = d ** -0.5
+    return {
+        "w_dq": (jax.random.normal(ks[0], (d, m.q_lora)) * s).astype(dtype),
+        "w_uq": (jax.random.normal(ks[1], (m.q_lora, H, m.nope_dim + m.rope_dim)) * m.q_lora ** -0.5).astype(dtype),
+        "w_dkv": (jax.random.normal(ks[2], (d, m.kv_lora)) * s).astype(dtype),
+        "w_kr": (jax.random.normal(ks[3], (d, m.rope_dim)) * s).astype(dtype),
+        "w_uk": (jax.random.normal(ks[4], (m.kv_lora, H, m.nope_dim)) * m.kv_lora ** -0.5).astype(dtype),
+        "w_uv": (jax.random.normal(ks[5], (m.kv_lora, H, m.v_dim)) * m.kv_lora ** -0.5).astype(dtype),
+        "wo": (jax.random.normal(ks[6], (H, m.v_dim, d)) * (H * m.v_dim) ** -0.5).astype(dtype),
+        "q_ln": jnp.zeros((m.q_lora,), dtype),
+        "kv_ln": jnp.zeros((m.kv_lora,), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# masked blockwise attention core
+# ---------------------------------------------------------------------------
+
+
+def _mask_logits(scores, q_pos, k_pos, mask_mode, window):
+    """scores: [..., Lq, Lk]; q_pos: [Lq]; k_pos: [Lk]."""
+    dq = q_pos[:, None]
+    dk = k_pos[None, :]
+    causal = dk <= dq
+    if mask_mode == MASK_BIDIR:
+        allow = jnp.ones_like(causal)
+    elif mask_mode == MASK_CAUSAL:
+        allow = causal
+    elif mask_mode == MASK_SLIDING:
+        allow = causal & (dk > dq - window)
+    elif mask_mode == MASK_CHUNKED:
+        allow = causal & (dk // window == dq // window)
+    else:
+        raise ValueError(mask_mode)
+    return jnp.where(allow, scores, -1e30)
+
+
+def _softcap(x, cap):
+    return cap * jnp.tanh(x / cap) if cap else x
+
+
+@partial(jax.jit, static_argnames=("mask_mode", "window", "q_block", "softcap", "banded"))
+def attend(
+    q: jax.Array,          # [B, Lq, H, D]
+    k: jax.Array,          # [B, Lk, K, D]
+    v: jax.Array,          # [B, Lk, K, Dv]
+    q_positions: jax.Array,  # [Lq]
+    k_positions: jax.Array,  # [Lk]
+    *,
+    mask_mode: int = MASK_CAUSAL,
+    window: int = 0,
+    q_block: int = 512,
+    softcap: float = 0.0,
+    banded: bool = False,
+) -> jax.Array:
+    """GQA attention, blockwise over queries (lazy masks, fp32 softmax).
+
+    ``banded=True`` (sliding/chunked modes with contiguous positions, i.e.
+    prefill/train): each query block attends only to the [window + block]
+    key slice it can actually see, instead of lazily masking all Lk keys —
+    an O(S·w) algorithm instead of O(S²) (EXPERIMENTS.md §Perf, gemma3 cell).
+    """
+    B, Lq, H, D = q.shape
+    Lk = k.shape[1]
+    K = k.shape[2]
+    Dv = v.shape[3]
+    G = H // K  # query heads per kv head
+    scale = D ** -0.5
+    qg = q.reshape(B, Lq, K, G, D)
+
+    bq = min(q_block, Lq)
+    if Lq % bq != 0:
+        bq = Lq  # irregular sizes: single block
+    nb = Lq // bq
+
+    use_band = (
+        banded and nb > 1 and window > 0
+        and mask_mode in (MASK_SLIDING, MASK_CHUNKED) and window % bq == 0
+    )
+
+    def block(qb, qpos_b):
+        # qb: [B, bq, K, G, D] against the full key set
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qb.astype(jnp.float32), k.astype(jnp.float32)) * scale
+        s = _softcap(s, softcap)
+        s = _mask_logits(s, qpos_b, k_positions, mask_mode, window)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+
+    def block_banded(qb, qpos_b):
+        # visible keys: [qpos0 - window + bq .. qpos0 + bq) for sliding
+        # (chunked: the containing chunk) -> a static-size kw slice.
+        kw = min(window + bq, Lk)
+        q0 = qpos_b[0]
+        if mask_mode == MASK_SLIDING:
+            start = jnp.clip(q0 + bq - kw, 0, Lk - kw)
+        else:  # chunked: containing chunk start (window % bq == 0)
+            start = jnp.clip((q0 // window) * window, 0, Lk - kw)
+        kb = jax.lax.dynamic_slice_in_dim(k, start, kw, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, start, kw, axis=1)
+        kpos_b = start + jnp.arange(kw)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qb.astype(jnp.float32), kb.astype(jnp.float32)) * scale
+        s = _softcap(s, softcap)
+        s = _mask_logits(s, qpos_b, kpos_b, mask_mode, window)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bkgqs,bskd->bqkgd", p, vb.astype(jnp.float32))
+
+    body = block_banded if use_band else block
+    if nb <= 1:
+        out = block(qg, q_positions)
+    else:
+        qs = qg.reshape(B, nb, bq, K, G, D).transpose(1, 0, 2, 3, 4, 5)
+        ps = q_positions.reshape(nb, bq)
+        out = jax.lax.map(lambda args: body(*args), (qs, ps))
+        out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Lq, K, G, Dv)
+    return out.reshape(B, Lq, H, Dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA layer (covers full/sliding/chunked/bidir + M-RoPE + ring-buffer cache)
+# ---------------------------------------------------------------------------
+
+
+def _maybe_qknorm(x, scale):
+    from repro.models.common import rms_norm
+
+    return rms_norm(x, scale) if scale is not None else x
+
+
+def gqa_attention(
+    params: dict,
+    cfg: AttnConfig,
+    x: jax.Array,            # [B, S, d]
+    positions: jax.Array,    # [S] (or [B,3,S] for M-RoPE)
+    *,
+    mask_mode: int = MASK_CAUSAL,
+    window: int = 0,
+    rope_on: bool = True,
+    rope_theta: float | None = None,
+    cache: dict | None = None,
+    kv_source: jax.Array | None = None,  # cross-attention (whisper)
+) -> tuple[jax.Array, dict | None]:
+    """Returns (output [B,S,d], updated cache).
+
+    Cache layout: {"k": [B, C, K, D], "v": [B, C, K, D], "pos": int32 scalar}
+    where C = full context for global layers or the ring-buffer size
+    (= window) for sliding/chunked layers.
+    """
+    theta = cfg.rope_theta if rope_theta is None else rope_theta
+    src = x if kv_source is None else kv_source
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    k = jnp.einsum("bsd,dke->bske", src, params["wk"])
+    v = jnp.einsum("bsd,dke->bske", src, params["wv"])
+    if cfg.qk_norm:
+        q = _maybe_qknorm(q, params["q_norm"])
+        k = _maybe_qknorm(k, params["k_norm"])
+
+    if rope_on and kv_source is None:
+        if cfg.mrope_sections is not None:
+            q = apply_mrope(q, positions, cfg.mrope_sections, cfg.mrope_theta)
+            k = apply_mrope(k, positions, cfg.mrope_sections, cfg.mrope_theta)
+            pos1d = positions[:, 0, :].max(axis=0)  # causal ordering stream
+        else:
+            q = apply_rope(q, positions, theta)
+            k = apply_rope(k, positions, theta)
+            pos1d = positions
+    else:
+        pos1d = positions if positions.ndim == 1 else positions[:, 0, :].max(axis=0)
+
+    if cache is None:
+        k_pos = jnp.arange(k.shape[1]) if kv_source is not None else pos1d
+        out = attend(q, k, v, pos1d, k_pos, mask_mode=mask_mode, window=window,
+                     softcap=cfg.softcap, banded=BANDED_DEFAULT)
+    else:
+        # decode: append new kv into (ring) cache, attend q over it.
+        C = cache["k"].shape[1]
+        pos = cache["pos"]  # scalar int32: absolute position of this token
+        slot = pos % C
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0) if k.shape[1] == 1 else (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0) if v.shape[1] == 1 else (0, 0, 0, 0))
+        k_abs = pos - ((pos - jnp.arange(C)) % C)  # absolute position per slot
+        # unwritten slots get a FUTURE position so the causal test excludes
+        # them (a past sentinel would pass `dk <= dq` and act as an attention
+        # sink of zero-vectors).
+        k_positions = jnp.where(k_abs < 0, (1 << 30), k_abs)
+        out = attend(q, ck, cv, pos1d[None] if pos1d.ndim == 0 else pos1d, k_positions,
+                     mask_mode=mask_mode, window=window if window else 0,
+                     softcap=cfg.softcap)
+        cache = {"k": ck, "v": cv, "pos": pos + q.shape[1]}
+    y = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    return y, cache
+
+
+def init_gqa_cache(batch: int, ctx: int, cfg: AttnConfig, *, window: int = 0, dtype=jnp.bfloat16) -> dict:
+    C = window if window else ctx
+    return {
+        "k": jnp.zeros((batch, C, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, C, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v3): latent KV cache, absorbed decode
+# ---------------------------------------------------------------------------
+
+
+def mla_attention(
+    params: dict,
+    cfg: AttnConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    cache: dict | None = None,
+) -> tuple[jax.Array, dict | None]:
+    """Multi-head Latent Attention.  Cache stores only (c_kv, k_rope):
+    kv_lora + rope_dim floats per token — the paper-relevant memory saving.
+    """
+    from repro.models.common import rms_norm
+
+    m = cfg.mla
+    H = cfg.n_heads
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, params["w_dq"]), params["q_ln"])
+    q = jnp.einsum("bsr,rhe->bshe", cq, params["w_uq"])  # e = nope + rope
+    q_nope, q_rope = q[..., : m.nope_dim], q[..., m.nope_dim :]
+
+    c_kv = rms_norm(jnp.einsum("bsd,dr->bsr", x, params["w_dkv"]), params["kv_ln"])
+    k_rope = jnp.einsum("bsd,de->bse", x, params["w_kr"])  # shared across heads
+
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+
+    scale = (m.nope_dim + m.rope_dim) ** -0.5
+
+    if cache is None:
+        # prefill/train: expand latents (compute-optimal at long Lq)
+        k_nope = jnp.einsum("bsr,rhe->bshe", c_kv, params["w_uk"])
+        v = jnp.einsum("bsr,rhe->bshe", c_kv, params["w_uv"])
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (*k_rope.shape[:2], H, m.rope_dim))], -1
+        )
+        q_full = jnp.concatenate([q_nope, q_rope], -1)
+        out = attend(q_full, k_full, v, positions, positions, mask_mode=MASK_CAUSAL)
+        y = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+        return y, None
+
+    # decode: absorbed form — attend in the latent space.
+    pos = cache["pos"]
+    C = cache["c_kv"].shape[1]
+    cc = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv, (0, pos % C, 0))
+    cr = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope, (0, pos % C, 0))
+    # q_nope absorbed through w_uk: [B,1,H,nope] x [r,H,nope] -> [B,1,H,r]
+    q_lat = jnp.einsum("bshe,rhe->bshr", q_nope, params["w_uk"])
+    s = jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32), cc.astype(jnp.float32))
+    s = s + jnp.einsum("bshe,bte->bhst", q_rope.astype(jnp.float32), cr.astype(jnp.float32))
+    k_positions = jnp.arange(C)
+    valid = k_positions <= pos
+    s = jnp.where(valid[None, None, None, :], s * scale, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhst,btr->bshr", p, cc.astype(jnp.float32))  # [B,1,H,r]
+    out = jnp.einsum("bshr,rhe->bshe", o_lat, params["w_uv"].astype(jnp.float32))
+    y = jnp.einsum("bshe,hed->bsd", out.astype(x.dtype), params["wo"])
+    return y, {"c_kv": cc, "k_rope": cr, "pos": pos + x.shape[1]}
+
+
+def init_mla_cache(batch: int, ctx: int, cfg: AttnConfig, dtype=jnp.bfloat16) -> dict:
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, ctx, m.kv_lora), dtype),
+        "k_rope": jnp.zeros((batch, ctx, m.rope_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }

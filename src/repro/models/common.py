@@ -1,0 +1,139 @@
+"""Shared model building blocks: norms, RoPE (incl. M-RoPE), sharding helpers.
+
+Sharding is expressed through *logical axis names* resolved against the active
+mesh by :class:`ShardingRules` — the same model code runs on a single CPU
+device (rules resolve to no-ops) and on the (pod, data, model) production mesh.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Logical-axis sharding
+# ---------------------------------------------------------------------------
+
+# Logical axes used throughout the model zoo.
+BATCH, SEQ, HEADS, KV_HEADS, D_MODEL, D_FF, VOCAB, EXPERT, STATE = (
+    "batch", "seq", "heads", "kv_heads", "d_model", "d_ff", "vocab", "expert", "state",
+)
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """logical axis -> mesh axis (or None). ``fsdp_axis`` additionally shards
+    the non-TP dimension of parameters (ZeRO-3) when set."""
+
+    batch: tuple | str | None = ("pod", "data")
+    seq: str | None = None           # set to "data" for sequence-parallel decode
+    heads: str | None = "model"
+    kv_heads: str | None = "model"
+    d_model: str | None = None
+    d_ff: str | None = "model"
+    vocab: str | None = "model"
+    expert: str | None = "model"
+    state: str | None = None
+    fsdp_axis: str | None = None     # e.g. "data" to shard params over DP too
+
+    def spec(self, *logical: Optional[str]) -> P:
+        return P(*(getattr(self, ax) if ax is not None else None for ax in logical))
+
+
+def logical_shard(x: jax.Array, rules: ShardingRules, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint if a mesh is active, else identity."""
+    env_mesh = jax.sharding.get_abstract_mesh()
+    if env_mesh is None or env_mesh.empty:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, jax.NamedSharding(jax.sharding.get_mesh(), rules.spec(*logical)))
+    except Exception:
+        return x
+
+
+def shard_constraint(x: jax.Array, spec: P) -> jax.Array:
+    """Constraint against the ambient mesh (jit in-context mesh)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(ang)[..., None, :]  # [..., S, 1, D/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions3: jax.Array, sections: tuple[int, ...], theta: float = 1e6
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE. positions3: [B, 3, S] (t, h, w streams);
+    ``sections`` are half-dim sizes per stream (e.g. (16, 24, 24)).
+
+    The stream-selection is a one-hot einsum (a tiny [3 x d/2] matmul) rather
+    than a gather: under GSPMD a gather against batch-sharded positions forced
+    involuntary resharding of every q/k tensor (285 GiB/step of wire on the
+    qwen2-vl train cell — EXPERIMENTS.md §Perf)."""
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    freqs = rope_freqs(d, theta)  # [D/2]
+    stream = jnp.repeat(jnp.arange(3), jnp.asarray(sections), total_repeat_length=d // 2)
+    onehot = jax.nn.one_hot(stream, 3, dtype=jnp.float32)  # [d/2, 3]
+    pos = jnp.einsum("bks,fk->bsf", positions3.astype(jnp.float32), onehot)  # [B,S,D/2]
+    ang = pos * freqs[None, None, :]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (dim / d))
+    out = jnp.zeros((n, d), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(ang))
+    out = out.at[:, 1::2].set(jnp.cos(ang))
+    return out

@@ -1,0 +1,334 @@
+"""Unified decoder LM covering dense GQA, MLA, MoE, sliding/chunked attention,
+RWKV6, Mamba2 and the Zamba2 hybrid — assembled from a per-layer ``LayerSpec``
+pattern.
+
+Layers are grouped into *stages*: maximal runs of a repeating spec period, so
+parameters stack as [count, period, ...] and the whole run is one
+``lax.scan`` (compact HLO at 126 layers, fast multi-pod compiles).  Caches
+stack the same way, and scan threads them through decode.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as A
+from repro.models import mlp as M
+from repro.models import ssm as S
+from repro.models.common import layer_norm, rms_norm, shard_constraint
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    kind: str = "attn"          # attn | mla | rwkv6 | mamba2 | shared_attn
+    mask_mode: int = A.MASK_CAUSAL
+    window: int = 0             # sliding/chunked extent
+    rope_on: bool = True
+    rope_theta: float = 1e4
+    moe: bool = False           # MoE feed-forward instead of dense
+    has_ffn: bool = True        # rwkv6/mamba2 blocks carry their own mixer
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    d_ff: int
+    vocab: int
+    attn: Optional[A.AttnConfig] = None
+    moe: Optional[M.MoEConfig] = None
+    rwkv: Optional[S.RWKV6Config] = None
+    mamba: Optional[S.Mamba2Config] = None
+    act: str = "silu"
+    norm: str = "rms"
+    pattern: tuple[LayerSpec, ...] = ()   # len == n_layers (built by configs/)
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+    emb_scale: bool = False               # gemma-style sqrt(d) embedding scale
+    dtype: str = "bf16"
+    remat: bool = True
+    # encoder-decoder extras (whisper)
+    enc_layers: int = 0
+    enc_seq: int = 0
+    # zamba2: one shared transformer block reused at 'shared_attn' layers
+    shared_block: bool = False
+    shared_d_ff: int = 0
+
+    @property
+    def compute_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bf16" else jnp.float32
+
+
+def default_pattern(n_layers: int, **kw) -> tuple[LayerSpec, ...]:
+    return tuple(LayerSpec(**kw) for _ in range(n_layers))
+
+
+# ---------------------------------------------------------------------------
+# stages: group the pattern into (period, count) runs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Stage:
+    specs: tuple[LayerSpec, ...]  # one period
+    count: int                    # repeats
+
+
+def build_stages(pattern: tuple[LayerSpec, ...], max_period: int = 8) -> tuple[Stage, ...]:
+    """Greedy periodic run-length grouping of the layer pattern."""
+    stages: list[Stage] = []
+    i = 0
+    n = len(pattern)
+    while i < n:
+        best = (1, 1)  # (period, count)
+        for p in range(1, max_period + 1):
+            if i + p > n:
+                break
+            period = pattern[i : i + p]
+            count = 1
+            while i + (count + 1) * p <= n and pattern[i + count * p : i + (count + 1) * p] == period:
+                count += 1
+            if p * count > best[0] * best[1] or (p * count == best[0] * best[1] and p < best[0]):
+                best = (p, count)
+        p, c = best
+        stages.append(Stage(specs=pattern[i : i + p], count=c))
+        i += p * c
+    return tuple(stages)
+
+
+# ---------------------------------------------------------------------------
+# per-layer init/apply
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ModelConfig, spec: LayerSpec, dtype) -> dict:
+    keys = jax.random.split(key, 4)
+    p: dict = {}
+    if spec.kind in ("attn", "shared_attn"):
+        p["ln1"] = jnp.zeros((cfg.d_model,), dtype)
+        p["attn"] = A.init_gqa_params(keys[0], cfg.attn, dtype)
+    elif spec.kind == "mla":
+        p["ln1"] = jnp.zeros((cfg.d_model,), dtype)
+        p["attn"] = A.init_mla_params(keys[0], cfg.attn, dtype)
+    elif spec.kind == "rwkv6":
+        p["ln1"] = jnp.zeros((cfg.d_model,), dtype)
+        p["mix"] = S.init_rwkv6_params(keys[0], cfg.rwkv, dtype)
+    elif spec.kind == "mamba2":
+        p["ln1"] = jnp.zeros((cfg.d_model,), dtype)
+        p["mix"] = S.init_mamba2_params(keys[0], cfg.mamba, dtype)
+    else:
+        raise ValueError(spec.kind)
+    if spec.has_ffn:
+        p["ln2"] = jnp.zeros((cfg.d_model,), dtype)
+        if spec.moe:
+            p["ffn"] = M.init_moe_params(keys[1], cfg.d_model, cfg.moe, cfg.act, dtype)
+        else:
+            d_ff = cfg.shared_d_ff if spec.kind == "shared_attn" and cfg.shared_d_ff else cfg.d_ff
+            p["ffn"] = M.init_mlp_params(keys[1], cfg.d_model, d_ff, cfg.act, dtype)
+    return p
+
+
+def _norm(cfg: ModelConfig, x, scale):
+    if cfg.norm == "rms":
+        return rms_norm(x, scale)
+    return layer_norm(x, 1.0 + scale, jnp.zeros_like(scale))
+
+
+def _apply_layer(params, cfg: ModelConfig, spec: LayerSpec, x, positions, cache):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = _norm(cfg, x, params["ln1"])
+    if spec.kind in ("attn", "shared_attn"):
+        y, cache = A.gqa_attention(
+            params["attn"], cfg.attn, h, positions,
+            mask_mode=spec.mask_mode, window=spec.window,
+            rope_on=spec.rope_on, rope_theta=spec.rope_theta, cache=cache,
+        )
+    elif spec.kind == "mla":
+        y, cache = A.mla_attention(params["attn"], cfg.attn, h, positions, cache=cache)
+    elif spec.kind == "rwkv6":
+        y, tm_state = S.rwkv6_time_mix(params["mix"], cfg.rwkv, h, None if cache is None else cache.get("tm"))
+        cache = {"tm": tm_state, **({} if cache is None else {k: v for k, v in cache.items() if k not in ("tm",)})}
+    else:  # mamba2
+        y, mstate = S.mamba2_mix(params["mix"], cfg.mamba, h, cache)
+        cache = mstate
+    x = x + y
+    if spec.has_ffn:
+        h = _norm(cfg, x, params["ln2"])
+        if spec.kind == "rwkv6":
+            y, cm_state = S.rwkv6_channel_mix(params["mix"], cfg.rwkv, h, None if cache is None or "cm" not in cache else cache["cm"])
+            cache = {**cache, "cm": cm_state}
+        elif spec.moe:
+            y, aux = M.apply_moe(params["ffn"], h, cfg.moe, cfg.act)
+        else:
+            y = M.apply_mlp(params["ffn"], h, cfg.act)
+        x = x + y
+    return x, cache, aux
+
+
+def _init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, ctx: int, dtype):
+    if spec.kind in ("attn", "shared_attn"):
+        return A.init_gqa_cache(batch, ctx, cfg.attn, window=spec.window, dtype=dtype)
+    if spec.kind == "mla":
+        return A.init_mla_cache(batch, ctx, cfg.attn, dtype=dtype)
+    if spec.kind == "rwkv6":
+        r = cfg.rwkv
+        return {
+            "tm": {
+                "shift": jnp.zeros((batch, cfg.d_model), dtype),
+                "wkv": jnp.zeros((batch, r.n_heads, r.head_dim, r.head_dim), jnp.float32),
+            },
+            "cm": jnp.zeros((batch, cfg.d_model), dtype),
+        }
+    if spec.kind == "mamba2":
+        m = cfg.mamba
+        return {
+            "conv": jnp.zeros((batch, m.conv_width - 1, m.d_inner + 2 * m.d_state), dtype),
+            "ssm": jnp.zeros((batch, m.n_heads, m.head_dim, m.d_state), jnp.float32),
+        }
+    raise ValueError(spec.kind)
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+
+class DecoderLM:
+    """init/apply-style module (explicit params pytree, fully jit-friendly)."""
+
+    def __init__(self, cfg: ModelConfig):
+        assert len(cfg.pattern) == cfg.n_layers, (cfg.name, len(cfg.pattern), cfg.n_layers)
+        self.cfg = cfg
+        self.stages = build_stages(cfg.pattern)
+
+    # -- params ------------------------------------------------------------
+    def init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        dtype = cfg.compute_dtype
+        n_stage = len(self.stages)
+        keys = jax.random.split(key, n_stage + 3)
+        params: dict = {
+            "embed": (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) * cfg.d_model ** -0.5).astype(dtype),
+            "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = (
+                jax.random.normal(keys[1], (cfg.d_model, cfg.vocab)) * cfg.d_model ** -0.5
+            ).astype(dtype)
+        if cfg.shared_block:
+            params["shared"] = _init_layer(keys[2], cfg, LayerSpec(kind="shared_attn"), dtype)
+        for si, stage in enumerate(self.stages):
+            def init_one(k):
+                ks = jax.random.split(k, len(stage.specs))
+                return [
+                    None if sp.kind == "shared_attn" and cfg.shared_block else _init_layer(kk, cfg, sp, dtype)
+                    for kk, sp in zip(ks, stage.specs)
+                ]
+
+            stage_keys = jax.random.split(keys[3 + si], stage.count)
+            per = [init_one(k) for k in stage_keys]  # [count][period] of dict|None
+            stacked = []
+            for pi in range(len(stage.specs)):
+                items = [per[c][pi] for c in range(stage.count)]
+                if items[0] is None:
+                    stacked.append(None)
+                else:
+                    stacked.append(jax.tree.map(lambda *xs: jnp.stack(xs), *items))
+            params[f"stage{si}"] = stacked
+        return params
+
+    # -- caches ------------------------------------------------------------
+    def init_cache(self, batch: int, ctx: int, dtype=jnp.bfloat16) -> list:
+        caches = []
+        for stage in self.stages:
+            percache = []
+            for sp in stage.specs:
+                one = _init_layer_cache(self.cfg, sp, batch, ctx, dtype)
+                percache.append(jax.tree.map(lambda x: jnp.broadcast_to(x, (stage.count, *x.shape)).copy() if stage.count else x, one))
+            caches.append(percache)
+        return caches
+
+    # -- forward -----------------------------------------------------------
+    def apply(
+        self,
+        params: dict,
+        tokens: jax.Array,           # [B, S] int32
+        positions: jax.Array,        # [S] or [B,3,S] (mrope)
+        cache: list | None = None,
+        batch_axes=None,
+    ) -> tuple[jax.Array, list | None, jax.Array]:
+        """Returns (logits [B,S,V], new_cache, aux_loss)."""
+        cfg = self.cfg
+        x = params["embed"][tokens]  # gather; vocab-sharded -> all-reduce
+        if cfg.emb_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        if batch_axes is not None:
+            x = shard_constraint(x, P(batch_axes, None, None))
+        aux_total = jnp.zeros((), jnp.float32)
+        new_cache: list | None = [] if cache is not None else None
+
+        for si, stage in enumerate(self.stages):
+            stage_params = params[f"stage{si}"]
+            stage_cache = cache[si] if cache is not None else None
+
+            def body(carry, xs):
+                x, aux = carry
+                lp_list, lc_list = xs
+                new_lcs = []
+                for pi, sp in enumerate(stage.specs):
+                    lp = lp_list[pi] if lp_list[pi] is not None else params["shared"]
+                    lc = lc_list[pi] if lc_list is not None else None
+                    x, nlc, a = _apply_layer(lp, cfg, sp, x, positions, lc)
+                    if batch_axes is not None:
+                        x = shard_constraint(x, P(batch_axes, None, None))
+                    new_lcs.append(nlc)
+                return (x, aux + a), new_lcs
+
+            body_fn = jax.checkpoint(body) if (cfg.remat and cache is None) else body
+
+            xs = (stage_params, stage_cache)
+            if stage.count == 1:
+                # unrolled single repeat: strip the leading stack axis
+                lp = jax.tree.map(lambda t: t[0], stage_params)
+                lc = jax.tree.map(lambda t: t[0], stage_cache) if stage_cache is not None else None
+                (x, aux_total), ncs = body_fn((x, aux_total), (lp, lc))
+                if new_cache is not None:
+                    new_cache.append(jax.tree.map(lambda t: t[None], ncs))
+            else:
+                (x, aux_total), ncs = jax.lax.scan(body_fn, (x, aux_total), xs)
+                if new_cache is not None:
+                    new_cache.append(ncs)
+
+        x = _norm(cfg, x, params["final_norm"])
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("bsd,dv->bsv", x, head)
+        if cfg.logit_softcap:
+            logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+        return logits, new_cache, aux_total
+
+    # -- steps --------------------------------------------------------------
+    def loss(self, params, tokens, targets, positions, batch_axes=None):
+        logits, _, aux = self.apply(params, tokens, positions, batch_axes=batch_axes)
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        nll = (logz - gold).mean()
+        zloss = 1e-4 * (logz ** 2).mean()
+        return nll + zloss + aux, {"nll": nll, "aux": aux}
+
+    def decode_step(self, params, cache, token, pos, batch_axes=None):
+        """token: [B,1]; pos: scalar int32 absolute position."""
+        if self.cfg.attn is not None and self.cfg.attn.mrope_sections is not None and pos.ndim == 0:
+            positions = jnp.full((token.shape[0], 3, 1), pos, jnp.int32)
+        else:
+            positions = pos[None] if pos.ndim == 0 else pos
+        logits, cache, _ = self.apply(params, token, positions, cache=cache, batch_axes=batch_axes)
+        return logits[:, -1], cache
+
+

@@ -1,0 +1,129 @@
+"""Encoder-decoder LM (Whisper backbone).
+
+Per the brief, the audio frontend (mel + conv downsampling) is a STUB:
+``input_specs()`` supplies precomputed frame embeddings [B, T_enc, d].  The
+backbone is complete: bidirectional encoder, causal decoder with
+cross-attention, learned decoder positions, pre-LN (+ biasless layer norm to
+keep one norm implementation; noted in DESIGN.md)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as A
+from repro.models import mlp as M
+from repro.models.common import shard_constraint, sinusoidal_positions
+from repro.models.decoder import ModelConfig, _norm
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        dtype = cfg.compute_dtype
+        n = cfg.enc_layers + 2 * cfg.n_layers + 2
+        keys = iter(jax.random.split(key, 2 * n + 8))
+
+        def enc_layer():
+            return {
+                "ln1": jnp.zeros((cfg.d_model,), dtype),
+                "attn": A.init_gqa_params(next(keys), cfg.attn, dtype),
+                "ln2": jnp.zeros((cfg.d_model,), dtype),
+                "ffn": M.init_mlp_params(next(keys), cfg.d_model, cfg.d_ff, cfg.act, dtype),
+            }
+
+        def dec_layer():
+            return {
+                "ln1": jnp.zeros((cfg.d_model,), dtype),
+                "attn": A.init_gqa_params(next(keys), cfg.attn, dtype),
+                "ln_x": jnp.zeros((cfg.d_model,), dtype),
+                "xattn": A.init_gqa_params(next(keys), cfg.attn, dtype),
+                "ln2": jnp.zeros((cfg.d_model,), dtype),
+                "ffn": M.init_mlp_params(next(keys), cfg.d_model, cfg.d_ff, cfg.act, dtype),
+            }
+
+        stack = lambda items: jax.tree.map(lambda *xs: jnp.stack(xs), *items)
+        return {
+            "embed": (jax.random.normal(next(keys), (cfg.vocab, cfg.d_model)) * cfg.d_model ** -0.5).astype(dtype),
+            "pos_dec": (jax.random.normal(next(keys), (cfg.enc_seq + 8192, cfg.d_model)) * 0.01).astype(dtype),
+            "enc": stack([enc_layer() for _ in range(cfg.enc_layers)]),
+            "enc_norm": jnp.zeros((cfg.d_model,), dtype),
+            "dec": stack([dec_layer() for _ in range(cfg.n_layers)]),
+            "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        }
+
+    # -- encoder -------------------------------------------------------------
+    def encode(self, params, enc_feats: jax.Array, batch_axes=None) -> jax.Array:
+        """enc_feats: [B, T, d] precomputed frame embeddings (stub frontend)."""
+        cfg = self.cfg
+        T = enc_feats.shape[1]
+        x = enc_feats + sinusoidal_positions(T, cfg.d_model).astype(enc_feats.dtype)
+        pos = jnp.arange(T)
+
+        def body(x, lp):
+            h = _norm(cfg, x, lp["ln1"])
+            y, _ = A.gqa_attention(lp["attn"], cfg.attn, h, pos, mask_mode=A.MASK_BIDIR, rope_on=False)
+            x = x + y
+            h = _norm(cfg, x, lp["ln2"])
+            x = x + M.apply_mlp(lp["ffn"], h, cfg.act)
+            if batch_axes is not None:
+                x = shard_constraint(x, P(batch_axes, None, None))
+            return x, None
+
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body, x, params["enc"])
+        return _norm(cfg, x, params["enc_norm"])
+
+    # -- decoder -------------------------------------------------------------
+    def decode(self, params, enc_out, tokens, positions, cache=None, batch_axes=None):
+        """tokens: [B,S]; cache: {"self": stacked, "cross": stacked} or None."""
+        cfg = self.cfg
+        x = params["embed"][tokens] + params["pos_dec"][positions]
+        pos = positions
+
+        def body(carry, xs):
+            x = carry
+            lp, lc = xs
+            h = _norm(cfg, x, lp["ln1"])
+            y, nsc = A.gqa_attention(lp["attn"], cfg.attn, h, pos, mask_mode=A.MASK_CAUSAL,
+                                     rope_on=False, cache=None if lc is None else lc["self"])
+            x = x + y
+            h = _norm(cfg, x, lp["ln_x"])
+            # cross-attention: precomputed (k, v) live in the cache at decode
+            y, _ = A.gqa_attention(lp["xattn"], cfg.attn, h, pos, mask_mode=A.MASK_BIDIR,
+                                   rope_on=False, kv_source=enc_out)
+            x = x + y
+            h = _norm(cfg, x, lp["ln2"])
+            x = x + M.apply_mlp(lp["ffn"], h, cfg.act)
+            if batch_axes is not None:
+                x = shard_constraint(x, P(batch_axes, None, None))
+            return x, ({"self": nsc} if lc is not None else None)
+
+        body_fn = jax.checkpoint(body) if (cfg.remat and cache is None) else body
+        x, new_cache = jax.lax.scan(body_fn, x, (params["dec"], cache))
+        x = _norm(cfg, x, params["final_norm"])
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+        return logits, new_cache
+
+    # -- steps ---------------------------------------------------------------
+    def loss(self, params, enc_feats, tokens, targets, batch_axes=None):
+        enc_out = self.encode(params, enc_feats, batch_axes)
+        positions = jnp.arange(tokens.shape[1])
+        logits, _ = self.decode(params, enc_out, tokens, positions, batch_axes=batch_axes)
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        nll = (logz - gold).mean()
+        return nll + 1e-4 * (logz ** 2).mean(), {"nll": nll}
+
+    def init_cache(self, batch: int, ctx: int, dtype=jnp.bfloat16):
+        one = A.init_gqa_cache(batch, ctx, self.cfg.attn, dtype=dtype)
+        return jax.tree.map(lambda t: jnp.broadcast_to(t, (self.cfg.n_layers, *t.shape)).copy(), {"self": one})
+
+    def decode_step(self, params, cache, enc_out, token, pos, batch_axes=None):
+        positions = pos[None] if pos.ndim == 0 else pos
+        logits, cache = self.decode(params, enc_out, token, positions, cache=cache, batch_axes=batch_axes)
+        return logits[:, -1], cache

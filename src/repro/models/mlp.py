@@ -1,0 +1,131 @@
+"""Feed-forward blocks: SwiGLU / GELU MLPs and capacity-based MoE.
+
+The MoE dispatch is the GShard/Switch TPU formulation: top-k routing with a
+per-expert capacity, position-in-expert via cumsum, dense [E, C, d] einsums
+(expert axis shardable over "model"), combine weighted by router probs.
+FLOPs therefore scale with *active* tokens x capacity_factor — roofline-honest,
+unlike a dense one-hot-over-all-experts formulation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                       # per-expert hidden dim
+    n_shared: int = 0               # shared (always-on) experts
+    shared_d_ff: int = 0
+    router: str = "softmax"         # softmax | sigmoid (deepseek-v3)
+    capacity_factor: float = 1.25
+    first_dense: int = 0            # leading dense layers (deepseek: 3)
+    aux_loss_coef: float = 0.001
+
+
+def init_mlp_params(key, d_model: int, d_ff: int, act: str, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    s_in, s_out = d_model ** -0.5, d_ff ** -0.5
+    p = {
+        "w_up": (jax.random.normal(ks[0], (d_model, d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[1], (d_ff, d_model)) * s_out).astype(dtype),
+    }
+    if act == "silu":  # SwiGLU gate
+        p["w_gate"] = (jax.random.normal(ks[2], (d_model, d_ff)) * s_in).astype(dtype)
+    return p
+
+
+def apply_mlp(params: dict, x: jax.Array, act: str) -> jax.Array:
+    if act == "silu":
+        h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, params["w_gate"]))
+        h = h * jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    elif act == "gelu":
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, params["w_up"]))
+    else:
+        raise ValueError(act)
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+def init_moe_params(key, d_model: int, cfg: MoEConfig, act: str, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 5)
+    E, F = cfg.n_experts, cfg.d_ff
+    s_in, s_out = d_model ** -0.5, F ** -0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (d_model, E)) * s_in).astype(jnp.float32),
+        "we_up": (jax.random.normal(ks[1], (E, d_model, F)) * s_in).astype(dtype),
+        "we_down": (jax.random.normal(ks[2], (E, F, d_model)) * s_out).astype(dtype),
+    }
+    if act == "silu":
+        p["we_gate"] = (jax.random.normal(ks[3], (E, d_model, F)) * s_in).astype(dtype)
+    if cfg.n_shared:
+        p["shared"] = init_mlp_params(ks[4], d_model, cfg.shared_d_ff or cfg.d_ff, act, dtype)
+    return p
+
+
+def _route(logits: jax.Array, cfg: MoEConfig) -> tuple[jax.Array, jax.Array]:
+    """logits [T, E] -> (weights [T, k], expert ids [T, k])."""
+    if cfg.router == "sigmoid":  # deepseek-v3: sigmoid scores, normalized top-k
+        scores = jax.nn.sigmoid(logits)
+        w, idx = jax.lax.top_k(scores, cfg.top_k)
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, idx = jax.lax.top_k(probs, cfg.top_k)
+    return w, idx
+
+
+def apply_moe(params: dict, x: jax.Array, cfg: MoEConfig, act: str) -> tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (out [B, S, d], aux load-balance loss scalar)."""
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    E, k = cfg.n_experts, cfg.top_k
+    cap = int(max(1, round(T * k * cfg.capacity_factor / E)))
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), params["router"])
+    w, idx = _route(logits, cfg)  # [T,k]
+
+    # Load-balance aux loss (Switch): E * sum_e f_e * p_e
+    probs = jax.nn.softmax(logits, axis=-1)
+    f = jnp.zeros(E).at[idx.reshape(-1)].add(1.0) / (T * k)
+    aux = E * jnp.sum(f * probs.mean(0)) * cfg.aux_loss_coef
+
+    # position-in-expert via cumsum over the flattened (T*k) dispatch order
+    flat_e = idx.reshape(-1)  # [T*k]
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # [T*k, E]
+    cum = jnp.cumsum(onehot, axis=0) - onehot
+    pos_in_e = jnp.take_along_axis(cum, flat_e[:, None], axis=1)[:, 0]
+    keep = pos_in_e < cap
+    wflat = w.reshape(-1) * keep  # dropped tokens contribute nothing
+
+    # scatter tokens into [E, C, d]
+    slot = jnp.where(keep, flat_e * cap + pos_in_e, E * cap)  # overflow -> trash row
+    xtk = jnp.repeat(xt, k, axis=0)  # token row per (t, k) dispatch
+    buf = jnp.zeros((E * cap + 1, d), x.dtype).at[slot].add(xtk)
+    xe = buf[:-1].reshape(E, cap, d)
+
+    if act == "silu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, params["we_gate"]))
+        h = h * jnp.einsum("ecd,edf->ecf", xe, params["we_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xe, params["we_up"]))
+    ye = jnp.einsum("ecf,efd->ecd", h, params["we_down"])  # [E, C, d]
+
+    # gather back: each (t, k) reads its slot
+    yflat = ye.reshape(E * cap, d)
+    ytk = jnp.where(keep[:, None], yflat[jnp.clip(slot, 0, E * cap - 1)], 0.0)
+    out = (ytk * wflat[:, None]).reshape(T, k, d).sum(1).reshape(B, S, d)
+
+    if "shared" in params:
+        out = out + apply_mlp(params["shared"], x, act)
+    return out.astype(x.dtype), aux

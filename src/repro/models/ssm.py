@@ -1,0 +1,232 @@
+"""Attention-free sequence mixers: RWKV6 (Finch) and Mamba2 (SSD).
+
+Both are O(1)-state recurrences — the archs that make the long_500k cell
+feasible.  Training uses lax.scan over time (compact HLO; the dry-run cost
+analysis charges the true sequential FLOPs); decode is a single-step state
+update with no sequence-length tensor at all.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class RWKV6Config:
+    d_model: int
+    head_dim: int = 64
+    d_ff: int = 14336
+    lora_mix: int = 32
+    lora_decay: int = 64
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+@dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 time-mix + channel-mix
+# ---------------------------------------------------------------------------
+
+_MIX_NAMES = ("r", "k", "v", "w", "g")
+
+
+def init_rwkv6_params(key, cfg: RWKV6Config, dtype=jnp.float32) -> dict:
+    d, r = cfg.d_model, cfg.lora_mix
+    ks = jax.random.split(key, 12)
+    s = d ** -0.5
+    return {
+        "mu_x": jnp.full((d,), 0.5, dtype),
+        "mu": jnp.full((5, d), 0.5, dtype),
+        "mix_w1": (jax.random.normal(ks[0], (d, 5 * r)) * s).astype(dtype),
+        "mix_w2": (jax.random.normal(ks[1], (5, r, d)) * r ** -0.5).astype(dtype),
+        "w0": jnp.zeros((d,), dtype),  # decay bias (per channel)
+        "decay_w1": (jax.random.normal(ks[2], (d, cfg.lora_decay)) * s).astype(dtype),
+        "decay_w2": (jax.random.normal(ks[3], (cfg.lora_decay, d)) * cfg.lora_decay ** -0.5).astype(dtype),
+        "u": jnp.zeros((cfg.n_heads, cfg.head_dim), dtype),  # per-head bonus
+        "wr": (jax.random.normal(ks[4], (d, d)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[5], (d, d)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[6], (d, d)) * s).astype(dtype),
+        "wg": (jax.random.normal(ks[7], (d, d)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[8], (d, d)) * s).astype(dtype),
+        "ln_out": jnp.ones((d,), dtype),  # per-head group norm scale
+        # channel mix
+        "cmix_r": jnp.full((d,), 0.5, dtype),
+        "cmix_k": jnp.full((d,), 0.5, dtype),
+        "cm_wr": (jax.random.normal(ks[9], (d, d)) * s).astype(dtype),
+        "cm_wk": (jax.random.normal(ks[10], (d, cfg.d_ff)) * s).astype(dtype),
+        "cm_wv": (jax.random.normal(ks[11], (cfg.d_ff, d)) * cfg.d_ff ** -0.5).astype(dtype),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None) -> jax.Array:
+    """x: [B,T,d] -> previous-token stream; ``prev`` is the carry for decode."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1) if x.shape[1] > 1 else prev[:, None]
+
+
+def rwkv6_time_mix(params, cfg: RWKV6Config, x, state):
+    """x: [B,T,d]; state: {"shift": [B,d], "wkv": [B,H,hd,hd]} or None (zeros).
+
+    Returns (out, new_state)."""
+    B, T, d = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    if state is None:
+        state = {
+            "shift": jnp.zeros((B, d), x.dtype),
+            "wkv": jnp.zeros((B, H, hd, hd), jnp.float32),
+        }
+    xs = _token_shift(x, state["shift"])
+    xx = xs - x
+    xxx = x + xx * params["mu_x"]
+    mix = jnp.tanh(jnp.einsum("btd,dr->btr", xxx, params["mix_w1"]))
+    mix = mix.reshape(B, T, 5, -1)
+    dmu = jnp.einsum("btfr,frd->fbtd", mix, params["mix_w2"])  # [5,B,T,d]
+    feeds = {n: x + xx * (params["mu"][i] + dmu[i]) for i, n in enumerate(_MIX_NAMES)}
+
+    r = jnp.einsum("btd,de->bte", feeds["r"], params["wr"]).reshape(B, T, H, hd)
+    k = jnp.einsum("btd,de->bte", feeds["k"], params["wk"]).reshape(B, T, H, hd)
+    v = jnp.einsum("btd,de->bte", feeds["v"], params["wv"]).reshape(B, T, H, hd)
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", feeds["g"], params["wg"]))
+    # data-dependent decay in (0,1): w = exp(-exp(w0 + lora(x_w)))
+    dw = jnp.einsum("btd,dr->btr", jnp.tanh(jnp.einsum("btd,dr->btr", feeds["w"], params["decay_w1"])), params["decay_w2"])
+    w = jnp.exp(-jnp.exp(params["w0"] + dw)).reshape(B, T, H, hd)
+
+    u = params["u"]
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # [B,H,hd] each
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)  # outer product
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = s * wt[..., None] + kv  # decay applied along the key dim
+        return s, out
+
+    seq = (
+        r.transpose(1, 0, 2, 3).astype(jnp.float32),
+        k.transpose(1, 0, 2, 3).astype(jnp.float32),
+        v.transpose(1, 0, 2, 3).astype(jnp.float32),
+        w.transpose(1, 0, 2, 3).astype(jnp.float32),
+    )
+    new_wkv, outs = jax.lax.scan(step, state["wkv"], seq)
+    out = outs.transpose(1, 0, 2, 3).reshape(B, T, d).astype(x.dtype)
+    # per-head group norm, then gate and project
+    out = out.reshape(B, T, H, hd)
+    mu_o = out.mean(-1, keepdims=True)
+    var_o = out.var(-1, keepdims=True)
+    out = ((out - mu_o) * jax.lax.rsqrt(var_o + 1e-5)).reshape(B, T, d) * params["ln_out"]
+    out = jnp.einsum("btd,de->bte", out * g, params["wo"])
+    new_state = {"shift": x[:, -1], "wkv": new_wkv}
+    return out, new_state
+
+
+def rwkv6_channel_mix(params, cfg: RWKV6Config, x, state):
+    if state is None:
+        state = jnp.zeros((x.shape[0], x.shape[2]), x.dtype)
+    xs = _token_shift(x, state)
+    xx = xs - x
+    xr = x + xx * params["cmix_r"]
+    xk = x + xx * params["cmix_k"]
+    rr = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, params["cm_wr"]))
+    kk = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", xk, params["cm_wk"])))
+    out = rr * jnp.einsum("btf,fd->btd", kk, params["cm_wv"])
+    return out, x[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD, scalar-per-head decay)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2_params(key, cfg: Mamba2Config, dtype=jnp.float32) -> dict:
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    conv_ch = di + 2 * N
+    return {
+        "w_in": (jax.random.normal(ks[0], (d, 2 * di + 2 * N + H)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_ch)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((H,), dtype),
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "norm": jnp.ones((di,), dtype),
+        "w_out": (jax.random.normal(ks[2], (di, d)) * di ** -0.5).astype(dtype),
+    }
+
+
+def _causal_conv1d(x, w, b, state=None):
+    """x: [B,T,C]; w: [W,C] depthwise. state: [B,W-1,C] carry for decode."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1) :]
+    return jax.nn.silu(out + b), new_state
+
+
+def mamba2_mix(params, cfg: Mamba2Config, x, state):
+    """x: [B,T,d]; state {"conv": [B,W-1,C], "ssm": [B,H,P,N]} or None."""
+    B, T, d = x.shape
+    di, N, H, Pdim = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+    if state is None:
+        state = {
+            "conv": jnp.zeros((B, cfg.conv_width - 1, di + 2 * N), x.dtype),
+            "ssm": jnp.zeros((B, H, Pdim, N), jnp.float32),
+        }
+    zxbcdt = jnp.einsum("btd,de->bte", x, params["w_in"])
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+    xbc, conv_state = _causal_conv1d(xbc, params["conv_w"], params["conv_b"], state["conv"])
+    xin, Bmat, Cmat = jnp.split(xbc, [di, di + N], axis=-1)  # [B,T,di],[B,T,N],[B,T,N]
+    dt = jax.nn.softplus(dt + params["dt_bias"])  # [B,T,H]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # [H] negative
+
+    xh = xin.reshape(B, T, H, Pdim)
+
+    def step(s, inp):
+        xt, bt, ct, dtt = inp  # [B,H,P],[B,N],[B,N],[B,H]
+        decay = jnp.exp(dtt.astype(jnp.float32) * A)  # [B,H]
+        upd = jnp.einsum("bhp,bn->bhpn", xt * dtt[..., None], bt)
+        s = s * decay[..., None, None] + upd
+        yt = jnp.einsum("bhpn,bn->bhp", s, ct)
+        return s, yt
+
+    seq = (
+        xh.transpose(1, 0, 2, 3).astype(jnp.float32),
+        Bmat.transpose(1, 0, 2).astype(jnp.float32),
+        Cmat.transpose(1, 0, 2).astype(jnp.float32),
+        dt.transpose(1, 0, 2).astype(jnp.float32),
+    )
+    new_ssm, ys = jax.lax.scan(step, state["ssm"], seq)
+    y = ys.transpose(1, 0, 2, 3)  # [B,T,H,P]
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, T, di).astype(x.dtype)
+    # gated RMSNorm then out-proj
+    y = y * jax.nn.silu(z)
+    dt_ = y.dtype
+    y32 = y.astype(jnp.float32)
+    y = (y32 * jax.lax.rsqrt(jnp.mean(y32 * y32, -1, keepdims=True) + 1e-6)).astype(dt_) * params["norm"]
+    out = jnp.einsum("bte,ed->btd", y, params["w_out"])
+    return out, {"conv": conv_state, "ssm": new_ssm}

@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamWConfig, init, update
+from repro.optim.schedule import constant, step_decay, warmup_cosine
+
+__all__ = ["AdamWConfig", "init", "update", "constant", "step_decay", "warmup_cosine"]

@@ -1,0 +1,121 @@
+"""AdamW with optional compressed optimizer state (bf16 / int8 moments).
+
+Moment compression is one of the framework's distributed-memory tricks
+(DESIGN.md §8.5): int8 moments use per-tensor absmax scaling with stochastic
+rounding on the first moment, cutting optimizer HBM by 4x — this is what lets
+the 671B training cells fit a single v5e pod (EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    moment_dtype: str = "fp32"  # fp32 | bf16 | int8
+
+
+def _store(x: jax.Array, dtype: str, key: jax.Array | None = None):
+    if dtype == "fp32":
+        return x, None
+    if dtype == "bf16":
+        return x.astype(jnp.bfloat16), None
+    if dtype == "int8":
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30) / 127.0
+        y = x / scale
+        if key is not None:  # stochastic rounding (first moment)
+            y = jnp.floor(y + jax.random.uniform(key, y.shape, y.dtype))
+        else:
+            y = jnp.rint(y)
+        return jnp.clip(y, -127, 127).astype(jnp.int8), scale
+    raise ValueError(dtype)
+
+
+def _load(x: jax.Array, scale, dtype: str) -> jax.Array:
+    if dtype == "fp32":
+        return x
+    if dtype == "bf16":
+        return x.astype(jnp.float32)
+    return x.astype(jnp.float32) * scale
+
+
+def init(params: Any, cfg: AdamWConfig = AdamWConfig()) -> dict:
+    def zeros_like_stored(p):
+        if cfg.moment_dtype == "int8":
+            return {"q": jnp.zeros(p.shape, jnp.int8), "s": jnp.zeros(())}
+        dt = jnp.bfloat16 if cfg.moment_dtype == "bf16" else jnp.float32
+        return jnp.zeros(p.shape, dt)
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros_like_stored, params),
+        "v": jax.tree.map(zeros_like_stored, params),
+    }
+
+
+def _unpack(x, dtype):
+    if dtype == "int8":
+        return _load(x["q"], x["s"], dtype)
+    return _load(x, None, dtype)
+
+
+def _pack(x, dtype, key=None):
+    stored, scale = _store(x, dtype, key)
+    if dtype == "int8":
+        return {"q": stored, "s": scale}
+    return stored
+
+
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0, 1))
+def update(
+    params: Any,
+    state: dict,
+    grads: Any,
+    lr: jax.Array | float,
+    cfg: AdamWConfig = AdamWConfig(),
+    rng: jax.Array | None = None,
+) -> tuple[Any, dict]:
+    step = state["step"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    gleaves = treedef.flatten_up_to(grads)
+    mleaves = treedef.flatten_up_to(state["m"])
+    vleaves = treedef.flatten_up_to(state["v"])
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
+    keys = jax.random.split(rng, len(leaves))
+
+    new_p, new_m, new_v = [], [], []
+    for p, g, m_st, v_st, k in zip(leaves, gleaves, mleaves, vleaves, keys):
+        g = g.astype(jnp.float32)
+        m = b1 * _unpack(m_st, cfg.moment_dtype) + (1 - b1) * g
+        v = b2 * _unpack(v_st, cfg.moment_dtype) + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        upd = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay:
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+        new_m.append(_pack(m, cfg.moment_dtype, k if cfg.moment_dtype == "int8" else None))
+        new_v.append(_pack(v, cfg.moment_dtype))
+
+    return (
+        jax.tree_util.tree_unflatten(treedef, new_p),
+        {
+            "step": step,
+            "m": jax.tree_util.tree_unflatten(treedef, new_m),
+            "v": jax.tree_util.tree_unflatten(treedef, new_v),
+        },
+    )

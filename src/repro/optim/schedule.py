@@ -1,0 +1,30 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def step_decay(init_lr: float, factor: float, every_steps: int):
+    """Paper §4.1: lr starts at 1e-3 with a decay every 30 epochs.  The decay
+    magnitude is ambiguous in the paper ("a decay of 0.005 every 30 epochs");
+    we default to factor=0.5 and expose the knob (EXPERIMENTS.md §Repro-notes)."""
+
+    def fn(step):
+        return init_lr * factor ** (jnp.asarray(step) // every_steps)
+
+    return fn
+
+
+def warmup_cosine(init_lr: float, warmup_steps: int, total_steps: int, min_ratio: float = 0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = (step + 1.0) / jnp.maximum(warmup_steps, 1)  # lr > 0 from step 0
+        prog = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return init_lr * jnp.where(step < warmup_steps, warm, cos)
+
+    return fn
+
+
+def constant(lr: float):
+    return lambda step: jnp.full((), lr)

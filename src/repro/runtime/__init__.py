@@ -1,0 +1,10 @@
+from repro.runtime.elastic import plan_remesh, reshard_restore
+from repro.runtime.fault import FailureInjector, HeartbeatMonitor, ResilientLoop
+
+__all__ = [
+    "plan_remesh",
+    "reshard_restore",
+    "FailureInjector",
+    "HeartbeatMonitor",
+    "ResilientLoop",
+]

@@ -1,0 +1,39 @@
+"""Elastic scaling: re-shard a checkpoint onto a different mesh.
+
+Checkpoints store full logical arrays (mesh-agnostic), so scaling from N to M
+pods is: build the new mesh, recompute PartitionSpecs against it (the
+divisibility-aware rules drop axes that no longer fit), and device_put each
+leaf with its new NamedSharding.  The same path serves shrink (node loss) and
+grow (capacity arrival).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.launch import sharding as SH
+
+
+def reshard_restore(
+    manager: CheckpointManager,
+    target_tree,
+    new_mesh,
+    *,
+    step: int | None = None,
+    opts: SH.ShardingOptions | None = None,
+):
+    """Restore ``target_tree``-shaped state onto ``new_mesh``."""
+    opts = opts or SH.ShardingOptions()
+    pspecs = SH.param_pspecs(target_tree, opts, new_mesh)
+    shardings = SH.named(new_mesh, pspecs)
+    return manager.restore(target_tree, step, shardings=shardings)
+
+
+def plan_remesh(old_mesh_shape: tuple, n_devices: int) -> tuple:
+    """Pick the closest (data, model) factorization for the surviving devices,
+    preserving the model-parallel degree when possible (weights keep their
+    layout; only DP shrinks)."""
+    model = old_mesh_shape[-1]
+    while n_devices % model != 0 and model > 1:
+        model //= 2
+    return (n_devices // model, model)

@@ -1,0 +1,111 @@
+"""Fault tolerance: heartbeats, straggler detection, checkpointed restart.
+
+On a real cluster the HeartbeatMonitor feeds the pod manager; here the same
+interface is exercised by tests with injected delays/failures.  The
+ResilientLoop is the production training driver's core: deterministic step
+boundaries, periodic async checkpoints, automatic restore-and-replay after a
+failure, straggler-triggered rebalancing hooks.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+@dataclass
+class HeartbeatMonitor:
+    """Per-worker step heartbeats with MAD-based straggler detection."""
+
+    n_workers: int
+    straggler_factor: float = 3.0
+    window: int = 16
+    _times: dict[int, list[float]] = field(default_factory=dict)
+
+    def beat(self, worker: int, step_duration: float) -> None:
+        self._times.setdefault(worker, []).append(step_duration)
+        if len(self._times[worker]) > self.window:
+            self._times[worker] = self._times[worker][-self.window:]
+
+    def stragglers(self) -> list[int]:
+        if len(self._times) < self.n_workers:
+            return []  # missing heartbeats handled by dead()
+        med = np.median([np.median(v) for v in self._times.values()])
+        bad = []
+        for w, v in self._times.items():
+            if np.median(v[-4:]) > self.straggler_factor * max(med, 1e-9):
+                bad.append(w)
+        return bad
+
+    def dead(self, last_beat: dict[int, float], now: float, timeout: float) -> list[int]:
+        return [w for w in range(self.n_workers) if now - last_beat.get(w, 0.0) > timeout]
+
+
+class FailureInjector:
+    """Deterministic fault injection for tests: raise at given steps."""
+
+    def __init__(self, fail_at: set[int]):
+        self.fail_at = set(fail_at)
+        self.failed: set[int] = set()
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.fail_at and step not in self.failed:
+            self.failed.add(step)
+            raise RuntimeError(f"injected failure at step {step}")
+
+
+@dataclass
+class ResilientLoop:
+    """Checkpoint/restart training loop.
+
+    ``step_fn(state, batch) -> (state, metrics)`` must be deterministic given
+    (state, batch); batches are addressed by step index so replay after
+    restore is exact.
+    """
+
+    step_fn: Callable
+    batch_fn: Callable  # step -> batch
+    manager: CheckpointManager
+    ckpt_every: int = 50
+    max_restarts: int = 8
+
+    def run(self, state, n_steps: int, *, injector: FailureInjector | None = None,
+            monitor: HeartbeatMonitor | None = None):
+        metrics_log = []
+        restarts = 0
+        step = 0
+        # resume if checkpoints exist
+        latest = self.manager.latest_step()
+        if latest is not None:
+            state = self.manager.restore(state, latest)
+            step = latest
+        while step < n_steps:
+            try:
+                t0 = time.time()
+                if injector is not None:
+                    injector.maybe_fail(step)
+                batch = self.batch_fn(step)
+                state, m = self.step_fn(state, batch)
+                if monitor is not None:
+                    monitor.beat(0, time.time() - t0)
+                metrics_log.append(m)
+                step += 1
+                if step % self.ckpt_every == 0:
+                    self.manager.save(step, state)
+            except RuntimeError as e:
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise
+                latest = self.manager.latest_step()
+                if latest is None:
+                    step = 0  # cold restart
+                    continue
+                self.manager.wait()
+                state = self.manager.restore(state, latest)
+                step = latest
+        self.manager.wait()
+        return state, metrics_log, restarts

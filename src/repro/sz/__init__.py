@@ -1,0 +1,34 @@
+"""Error-bounded lossy compressor substrate (SZ3-class), JAX-native.
+
+The transform core (prediction + error-controlled quantization) runs as pure
+JAX; the entropy stage (Huffman / zlib bitstreams) runs on host, as in real
+SZ GPU pipelines.
+"""
+from repro.sz.quantizer import (
+    prequantize,
+    dequantize_pre,
+    quantize_residual,
+    OUTLIER_RADIUS,
+)
+from repro.sz.predictor import (
+    lorenzo_encode,
+    lorenzo_decode,
+    interp_encode,
+    interp_decode,
+)
+from repro.sz.szjax import SZCompressor, SZCompressed, compress, decompress
+
+__all__ = [
+    "prequantize",
+    "dequantize_pre",
+    "quantize_residual",
+    "OUTLIER_RADIUS",
+    "lorenzo_encode",
+    "lorenzo_decode",
+    "interp_encode",
+    "interp_decode",
+    "SZCompressor",
+    "SZCompressed",
+    "compress",
+    "decompress",
+]

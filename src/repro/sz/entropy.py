@@ -1,0 +1,208 @@
+"""Host-side entropy stage: canonical Huffman + zlib backends.
+
+Bitstream packing is byte-sequential with no TPU analogue (real SZ GPU
+pipelines also run it on host) — see DESIGN.md §3.5.  The TPU side hands this
+module a dense int32 code tensor; encoding is fully vectorized numpy, decoding
+is a table-driven walk (fast enough for benchmark volumes).
+"""
+from __future__ import annotations
+
+import heapq
+import struct
+import zlib
+from dataclasses import dataclass
+
+import numpy as np
+
+_MAGIC = b"RPRE"
+
+
+def shannon_bits(symbols: np.ndarray) -> float:
+    """Ideal entropy-coded size in bits (lower bound for any entropy coder)."""
+    _, counts = np.unique(symbols, return_counts=True)
+    p = counts / counts.sum()
+    return float(-(p * np.log2(p)).sum() * symbols.size)
+
+
+# ---------------------------------------------------------------------------
+# Canonical Huffman
+# ---------------------------------------------------------------------------
+
+
+def _code_lengths(counts: np.ndarray) -> np.ndarray:
+    """Huffman code length per symbol from frequency counts (heap build)."""
+    n = len(counts)
+    if n == 1:
+        return np.array([1], np.int64)
+    heap = [(int(c), i) for i, c in enumerate(counts)]
+    heapq.heapify(heap)
+    parent = np.full(2 * n - 1, -1, np.int64)
+    nxt = n
+    while len(heap) > 1:
+        c1, i1 = heapq.heappop(heap)
+        c2, i2 = heapq.heappop(heap)
+        parent[i1] = nxt
+        parent[i2] = nxt
+        heapq.heappush(heap, (c1 + c2, nxt))
+        nxt += 1
+    depth = np.zeros(2 * n - 1, np.int64)
+    for i in range(nxt - 2, -1, -1):  # parents always have higher index
+        depth[i] = depth[parent[i]] + 1
+    return depth[:n]
+
+
+def _canonical_codes(lengths: np.ndarray) -> np.ndarray:
+    """Assign canonical codewords (as uint64) given code lengths."""
+    order = np.lexsort((np.arange(len(lengths)), lengths))
+    codes = np.zeros(len(lengths), np.uint64)
+    code = 0
+    prev_len = 0
+    for sym in order:
+        L = int(lengths[sym])
+        code <<= L - prev_len
+        codes[sym] = code
+        code += 1
+        prev_len = L
+    return codes
+
+
+@dataclass
+class HuffmanCodec:
+    """Canonical Huffman over a dense alphabet produced by np.unique remap."""
+
+    alphabet: np.ndarray  # original symbol values, sorted
+    lengths: np.ndarray
+    codes: np.ndarray
+
+    @staticmethod
+    def fit(symbols: np.ndarray) -> "HuffmanCodec":
+        alphabet, inv, counts = np.unique(symbols, return_inverse=True, return_counts=True)
+        lengths = _code_lengths(counts)
+        codes = _canonical_codes(lengths)
+        codec = HuffmanCodec(alphabet, lengths, codes)
+        codec._inv = inv  # cache the remap for the immediate encode
+        return codec
+
+    # -- encode (vectorized) ------------------------------------------------
+    def encode(self, symbols: np.ndarray) -> bytes:
+        inv = getattr(self, "_inv", None)
+        if inv is None or inv.size != symbols.size:
+            inv = np.searchsorted(self.alphabet, symbols.ravel())
+        lens = self.lengths[inv]
+        cws = self.codes[inv]
+        total = int(lens.sum())
+        ends = np.cumsum(lens)
+        starts = ends - lens
+        # bit i belongs to symbol searchsorted(ends, i, 'right')
+        bit_idx = np.arange(total, dtype=np.int64)
+        sym_of_bit = np.searchsorted(ends, bit_idx, side="right")
+        pos_in_code = bit_idx - starts[sym_of_bit]
+        shift = (lens[sym_of_bit] - 1 - pos_in_code).astype(np.uint64)
+        bits = ((cws[sym_of_bit] >> shift) & np.uint64(1)).astype(np.uint8)
+        packed = np.packbits(bits)
+        return struct.pack("<Q", total) + packed.tobytes()
+
+    # -- decode (table-driven walk) -----------------------------------------
+    def decode(self, blob: bytes, n_symbols: int) -> np.ndarray:
+        (total,) = struct.unpack_from("<Q", blob, 0)
+        bits = np.unpackbits(np.frombuffer(blob, np.uint8, offset=8))[:total]
+        # canonical decode tables: for each length, first code + index base
+        max_len = int(self.lengths.max())
+        order = np.lexsort((np.arange(len(self.lengths)), self.lengths))
+        sorted_syms = order
+        first_code = np.zeros(max_len + 2, np.int64)
+        first_idx = np.zeros(max_len + 2, np.int64)
+        count_at = np.bincount(self.lengths.astype(np.int64), minlength=max_len + 1)
+        code = 0
+        idx = 0
+        for L in range(1, max_len + 1):
+            first_code[L] = code
+            first_idx[L] = idx
+            code = (code + count_at[L]) << 1
+            idx += count_at[L]
+        out = np.empty(n_symbols, self.alphabet.dtype)
+        pos = 0
+        bits_list = bits.tolist()
+        fl_code = first_code.tolist()
+        fl_idx = first_idx.tolist()
+        cnt = count_at.tolist()
+        for i in range(n_symbols):
+            code = 0
+            L = 0
+            while True:
+                code = (code << 1) | bits_list[pos]
+                pos += 1
+                L += 1
+                if cnt[L] and code - fl_code[L] < cnt[L]:
+                    out[i] = self.alphabet[sorted_syms[fl_idx[L] + code - fl_code[L]]]
+                    break
+        return out
+
+    # -- serialization --------------------------------------------------------
+    def table_bytes(self) -> bytes:
+        return (
+            struct.pack("<I", len(self.alphabet))
+            + self.alphabet.astype(np.int32).tobytes()
+            + self.lengths.astype(np.uint8).tobytes()
+        )
+
+    @staticmethod
+    def from_table(blob: bytes) -> tuple["HuffmanCodec", int]:
+        (n,) = struct.unpack_from("<I", blob, 0)
+        off = 4
+        alphabet = np.frombuffer(blob, np.int32, n, offset=off).copy()
+        off += 4 * n
+        lengths = np.frombuffer(blob, np.uint8, n, offset=off).astype(np.int64)
+        off += n
+        return HuffmanCodec(alphabet, lengths, _canonical_codes(lengths)), off
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+
+
+def encode_codes(codes: np.ndarray, backend: str = "huffman+zlib") -> bytes:
+    """Entropy-encode an int32 code tensor; returns a self-describing blob."""
+    flat = np.ascontiguousarray(codes, np.int32).ravel()
+    if backend == "zlib":
+        # int32 -> int16 when it fits (usual case): halves the zlib input
+        if flat.size and abs(flat).max(initial=0) < 2**15:
+            payload = zlib.compress(flat.astype(np.int16).tobytes(), 6)
+            tag = b"z2"
+        else:
+            payload = zlib.compress(flat.tobytes(), 6)
+            tag = b"z4"
+        return _MAGIC + tag + struct.pack("<Q", flat.size) + payload
+    if backend in ("huffman", "huffman+zlib"):
+        codec = HuffmanCodec.fit(flat)
+        stream = codec.encode(flat)
+        if backend == "huffman+zlib":
+            stream = zlib.compress(stream, 6)
+            tag = b"hz"
+        else:
+            tag = b"hf"
+        table = codec.table_bytes()
+        return (
+            _MAGIC + tag + struct.pack("<QI", flat.size, len(table)) + table + stream
+        )
+    raise ValueError(f"unknown entropy backend {backend!r}")
+
+
+def decode_codes(blob: bytes, shape: tuple[int, ...]) -> np.ndarray:
+    assert blob[:4] == _MAGIC, "bad entropy blob"
+    tag = blob[4:6]
+    if tag in (b"z2", b"z4"):
+        (n,) = struct.unpack_from("<Q", blob, 6)
+        raw = zlib.decompress(blob[14:])
+        dt = np.int16 if tag == b"z2" else np.int32
+        return np.frombuffer(raw, dt).astype(np.int32).reshape(shape)
+    if tag in (b"hf", b"hz"):
+        n, tlen = struct.unpack_from("<QI", blob, 6)
+        off = 6 + 12
+        codec, used = HuffmanCodec.from_table(blob[off : off + tlen])
+        stream = blob[off + tlen :]
+        if tag == b"hz":
+            stream = zlib.decompress(stream)
+        return codec.decode(stream, n).astype(np.int32).reshape(shape)
+    raise ValueError(f"unknown entropy tag {tag!r}")

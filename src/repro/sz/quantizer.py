@@ -1,0 +1,66 @@
+"""Error-controlled quantization primitives.
+
+Two schemes, both guaranteeing |x - x'| <= eb pointwise:
+
+1. *Prequantization* (cuSZ-style, used by the Lorenzo path): quantize the
+   value itself onto a uniform grid of pitch 2*eb.  All downstream transforms
+   (integer Lorenzo / cumsum) are lossless, so the bound holds exactly and
+   every stage is embarrassingly parallel — this is the TPU adaptation of
+   SZ's sequential reconstruction sweep (see DESIGN.md §3.1).
+
+2. *Residual quantization* (used by the interpolation path): quantize the
+   difference between the true value and a prediction computed from already-
+   reconstructed values.  Codes outside ``[-OUTLIER_RADIUS, OUTLIER_RADIUS]``
+   are flagged as outliers and their exact values stored verbatim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# SZ-style quantization radius: codes live in (-R, R); |code| >= R means
+# "unpredictable" -> store exact value.  2^15 keeps the Huffman alphabet sane.
+OUTLIER_RADIUS = 1 << 15
+
+
+def prequantize(x: jax.Array, eb: float | jax.Array) -> jax.Array:
+    """Quantize values onto a uniform grid of pitch ``2 * eb``.
+
+    Returns int32 codes ``q`` with ``|x - 2*eb*q| <= eb``.  The caller must
+    ensure ``max|x| / (2*eb) < 2**30`` (checked in :mod:`repro.sz.szjax`).
+    """
+    eb = jnp.asarray(eb, x.dtype)
+    return jnp.rint(x / (2.0 * eb)).astype(jnp.int32)
+
+
+def dequantize_pre(q: jax.Array, eb: float | jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`prequantize`."""
+    eb = jnp.asarray(eb, dtype)
+    return q.astype(dtype) * (2.0 * eb)
+
+
+def quantize_residual(
+    x: jax.Array, pred: jax.Array, eb: float | jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Quantize ``x - pred`` with bound ``eb``.
+
+    Returns ``(code, recon, is_outlier)``:
+      * ``code``  int32 in (-R, R); 0 where outlier (outliers are coded
+        separately so the entropy stage sees a dense alphabet),
+      * ``recon`` the decompressor-visible reconstruction (``pred + 2*eb*code``
+        in-bound, exact ``x`` at outliers — SZ stores outliers verbatim),
+      * ``is_outlier`` bool mask.
+    """
+    eb = jnp.asarray(eb, x.dtype)
+    diff = x - pred
+    code = jnp.rint(diff / (2.0 * eb))
+    is_outlier = jnp.abs(code) >= OUTLIER_RADIUS
+    code = jnp.where(is_outlier, 0.0, code).astype(jnp.int32)
+    recon = pred + code.astype(x.dtype) * (2.0 * eb)
+    # Float rounding can nudge recon just past the bound; fall back to exact
+    # storage there too (same mechanism, negligible count).
+    bad = jnp.abs(recon - x) > eb
+    is_outlier = is_outlier | bad
+    code = jnp.where(bad, 0, code)
+    recon = jnp.where(is_outlier, x, recon)
+    return code, recon, is_outlier

@@ -1,0 +1,226 @@
+"""End-to-end SZ3-class compressor API.
+
+``compress`` returns both the serializable artifact and the decompressor-
+visible reconstruction (conventional error-bounded compressors produce the
+decompressed data during compression anyway, for bound checking — GWLZ relies
+on this to train enhancers without a second decompress pass).
+"""
+from __future__ import annotations
+
+import struct
+import zlib
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sz import predictor as P
+from repro.sz.entropy import decode_codes, encode_codes
+
+_HDR = struct.Struct("<4sBBBBQ")  # magic, ndim, predictor, order, levels, eb bits as u64
+_MAGIC = b"SZJX"
+_PRED = {"lorenzo": 0, "interp": 1}
+_PRED_INV = {v: k for k, v in _PRED.items()}
+_ORD = {"linear": 0, "cubic": 1}
+_ORD_INV = {v: k for k, v in _ORD.items()}
+
+
+@dataclass
+class SZCompressed:
+    """Self-describing compressed artifact (all host-side)."""
+
+    shape: tuple[int, ...]
+    padded_shape: tuple[int, ...]
+    levels: int
+    eb_abs: float
+    predictor: str
+    order: str
+    code_blob: bytes
+    outlier_idx: np.ndarray  # int64 flat indices into the padded volume
+    outlier_val: np.ndarray  # float32 exact values
+    extras: dict = field(default_factory=dict)  # e.g. attached GWLZ enhancers
+
+    @property
+    def nbytes(self) -> int:
+        return len(self.to_bytes())
+
+    def size_report(self) -> dict:
+        extras = sum(len(v) for v in self.extras.values())
+        return {
+            "codes": len(self.code_blob),
+            "outliers": 8 * self.outlier_idx.size + 4 * self.outlier_val.size,
+            "extras": extras,
+            "header": _HDR.size + 8 * len(self.shape) * 2 + 16,
+            "total": self.nbytes,
+        }
+
+    def to_bytes(self) -> bytes:
+        hdr = _HDR.pack(
+            _MAGIC,
+            len(self.shape),
+            _PRED[self.predictor],
+            _ORD[self.order],
+            self.levels,
+            np.float64(self.eb_abs).view(np.uint64),
+        )
+        dims = struct.pack(f"<{len(self.shape)}q", *self.shape)
+        pdims = struct.pack(f"<{len(self.padded_shape)}q", *self.padded_shape)
+        out_blob = zlib.compress(
+            self.outlier_idx.astype(np.int64).tobytes()
+            + self.outlier_val.astype(np.float32).tobytes(),
+            6,
+        )
+        extras_items = sorted(self.extras.items())
+        extras_blob = struct.pack("<I", len(extras_items))
+        for k, v in extras_items:
+            kb = k.encode()
+            extras_blob += struct.pack("<II", len(kb), len(v)) + kb + v
+        return (
+            hdr
+            + dims
+            + pdims
+            + struct.pack("<QQ", self.outlier_idx.size, len(out_blob))
+            + out_blob
+            + struct.pack("<Q", len(self.code_blob))
+            + self.code_blob
+            + extras_blob
+        )
+
+    @staticmethod
+    def from_bytes(blob: bytes) -> "SZCompressed":
+        magic, ndim, pred, order, levels, ebbits = _HDR.unpack_from(blob, 0)
+        assert magic == _MAGIC, "bad SZJX blob"
+        off = _HDR.size
+        shape = struct.unpack_from(f"<{ndim}q", blob, off)
+        off += 8 * ndim
+        pshape = struct.unpack_from(f"<{ndim}q", blob, off)
+        off += 8 * ndim
+        n_out, out_len = struct.unpack_from("<QQ", blob, off)
+        off += 16
+        raw = zlib.decompress(blob[off : off + out_len])
+        off += out_len
+        oidx = np.frombuffer(raw, np.int64, n_out).copy()
+        oval = np.frombuffer(raw, np.float32, n_out, offset=8 * n_out).copy()
+        (clen,) = struct.unpack_from("<Q", blob, off)
+        off += 8
+        code_blob = blob[off : off + clen]
+        off += clen
+        (n_extras,) = struct.unpack_from("<I", blob, off)
+        off += 4
+        extras = {}
+        for _ in range(n_extras):
+            klen, vlen = struct.unpack_from("<II", blob, off)
+            off += 8
+            k = blob[off : off + klen].decode()
+            off += klen
+            extras[k] = blob[off : off + vlen]
+            off += vlen
+        return SZCompressed(
+            shape=tuple(shape),
+            padded_shape=tuple(pshape),
+            levels=levels,
+            eb_abs=float(np.uint64(ebbits).view(np.float64)),
+            predictor=_PRED_INV[pred],
+            order=_ORD_INV[order],
+            code_blob=code_blob,
+            outlier_idx=oidx,
+            outlier_val=oval,
+            extras=extras,
+        )
+
+
+class SZCompressor:
+    """Configurable error-bounded compressor (predictor x order x backend)."""
+
+    def __init__(self, predictor: str = "interp", order: str = "cubic",
+                 backend: str = "huffman+zlib", max_levels: int = 5):
+        assert predictor in _PRED and order in _ORD
+        self.predictor = predictor
+        self.order = order
+        self.backend = backend
+        self.max_levels = max_levels
+
+    def compress(
+        self, x: jax.Array, *, rel_eb: float | None = None, abs_eb: float | None = None
+    ) -> tuple[SZCompressed, jax.Array]:
+        """Returns (artifact, reconstruction). Exactly one of rel_eb/abs_eb."""
+        x = jnp.asarray(x, jnp.float32)
+        if (rel_eb is None) == (abs_eb is None):
+            raise ValueError("pass exactly one of rel_eb / abs_eb")
+        if rel_eb is not None:
+            vrange = float(jnp.max(x) - jnp.min(x))
+            abs_eb = rel_eb * max(vrange, np.finfo(np.float32).tiny)
+        abs_eb = float(abs_eb)
+        max_q = float(jnp.max(jnp.abs(x))) / (2.0 * abs_eb)
+        if max_q >= 2**30:
+            raise ValueError(
+                f"eb={abs_eb:g} too small for data magnitude (q={max_q:.3g} >= 2^30)"
+            )
+
+        if self.predictor == "lorenzo":
+            codes = P.lorenzo_encode(x, abs_eb)
+            recon = P.lorenzo_decode(codes, abs_eb, x.dtype)
+            artifact = SZCompressed(
+                shape=tuple(x.shape),
+                padded_shape=tuple(x.shape),
+                levels=0,
+                eb_abs=abs_eb,
+                predictor="lorenzo",
+                order=self.order,
+                code_blob=encode_codes(np.asarray(codes), self.backend),
+                outlier_idx=np.zeros(0, np.int64),
+                outlier_val=np.zeros(0, np.float32),
+            )
+            return artifact, recon
+
+        codes, omask, ovals, recon, meta = P.interp_encode(
+            x, abs_eb, order=self.order, max_levels=self.max_levels
+        )
+        orig_shape, pshape, levels = meta
+        omask_np = np.asarray(omask)
+        oidx = np.flatnonzero(omask_np.ravel()).astype(np.int64)
+        oval = np.asarray(ovals).ravel()[oidx].astype(np.float32)
+        artifact = SZCompressed(
+            shape=orig_shape,
+            padded_shape=pshape,
+            levels=levels,
+            eb_abs=abs_eb,
+            predictor="interp",
+            order=self.order,
+            code_blob=encode_codes(np.asarray(codes), self.backend),
+            outlier_idx=oidx,
+            outlier_val=oval,
+        )
+        recon = recon[tuple(slice(0, d) for d in orig_shape)]
+        return artifact, recon
+
+    def decompress(self, artifact: SZCompressed) -> jax.Array:
+        if artifact.predictor == "lorenzo":
+            codes = jnp.asarray(decode_codes(artifact.code_blob, artifact.shape))
+            return P.lorenzo_decode(codes, artifact.eb_abs)
+        codes = decode_codes(artifact.code_blob, artifact.padded_shape)
+        omask = np.zeros(int(np.prod(artifact.padded_shape)), bool)
+        ovals = np.zeros(int(np.prod(artifact.padded_shape)), np.float32)
+        omask[artifact.outlier_idx] = True
+        ovals[artifact.outlier_idx] = artifact.outlier_val
+        meta = (artifact.shape, artifact.padded_shape, artifact.levels)
+        return P.interp_decode(
+            jnp.asarray(codes),
+            jnp.asarray(omask.reshape(artifact.padded_shape)),
+            jnp.asarray(ovals.reshape(artifact.padded_shape)),
+            artifact.eb_abs,
+            meta,
+            order=artifact.order,
+        )
+
+
+def compress(x, *, rel_eb=None, abs_eb=None, predictor="interp", order="cubic",
+             backend="huffman+zlib", max_levels=5):
+    c = SZCompressor(predictor, order, backend, max_levels)
+    return c.compress(x, rel_eb=rel_eb, abs_eb=abs_eb)
+
+
+def decompress(artifact: SZCompressed) -> jax.Array:
+    pred = artifact.predictor
+    return SZCompressor(pred, artifact.order).decompress(artifact)

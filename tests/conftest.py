@@ -1,0 +1,25 @@
+import os
+import sys
+
+# Tests run on the single host device (the 512-device override belongs ONLY
+# to launch/dryrun.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def nyx_small():
+    from repro.data import nyx_like_field
+
+    return nyx_like_field((32, 32, 32), "temperature", seed=7)
+
+
+@pytest.fixture(scope="session")
+def dm_small():
+    from repro.data import nyx_like_field
+
+    return nyx_like_field((32, 32, 32), "dark_matter_density", seed=3)

@@ -1,0 +1,100 @@
+"""Data pipelines + sharding rules."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.data import field_stats, nyx_like_field
+from repro.data.tokens import NyxBlockPipeline, TokenPipeline, TokenPipelineConfig
+from repro.launch.sharding import ShardingOptions, cache_pspecs, param_pspecs
+
+
+def test_nyx_temperature_matches_table1_stats():
+    x = nyx_like_field((48, 48, 48), "temperature", seed=1)
+    st = field_stats(x)
+    assert st["min"] == pytest.approx(2281.0, rel=1e-3)
+    assert st["max"] == pytest.approx(4.78e6, rel=1e-3)
+    assert 3e3 < st["avg"] < 5e4  # heavily skewed like the real field
+
+
+def test_dm_density_mean_one():
+    x = nyx_like_field((32, 32, 32), "dark_matter_density", seed=2)
+    assert float(x.mean()) == pytest.approx(1.0, abs=1e-3)
+    assert float(x.min()) >= 0.0
+
+
+def test_token_pipeline_deterministic_and_replayable():
+    cfg = TokenPipelineConfig(vocab=128, batch=4, seq=16, seed=3)
+    p1, p2 = TokenPipeline(cfg), TokenPipeline(cfg)
+    b1, b2 = p1.batch_at(17), p2.batch_at(17)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(p1.batch_at(18)["tokens"], b1["tokens"])
+    assert b1["tokens"].max() < 128
+
+
+def test_token_prefetch_matches_batch_at():
+    cfg = TokenPipelineConfig(vocab=64, batch=2, seq=8, seed=0)
+    pipe = TokenPipeline(cfg)
+    gen = pipe.prefetch(5)
+    for want_step in (5, 6, 7):
+        step, batch = next(gen)
+        assert step == want_step
+        np.testing.assert_array_equal(batch["tokens"], pipe.batch_at(step)["tokens"])
+    gen.close()
+
+
+def test_block_pipeline_shards_cover_volume():
+    vol = np.arange(4 * 4 * 4, dtype=np.float32).reshape(4, 4, 4)
+    pipe = NyxBlockPipeline(vol, (2, 2, 2))
+    seen = set()
+    for host in range(2):
+        for coords, blk in pipe.shard(host, 2):
+            assert blk.shape == (2, 2, 2)
+            assert coords not in seen
+            seen.add(coords)
+    assert len(seen) == 8
+
+
+# -- sharding rules --------------------------------------------------------
+
+
+def _mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_param_pspecs_divisibility_guard():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    params = {"attn": {"wk": jax.ShapeDtypeStruct((4, 64, 1, 16), "float32")}}
+    specs = param_pspecs(params, ShardingOptions(), mesh)
+    # kv_heads=1 indivisible by model size 1? size 1 divides everything; spec kept
+    assert specs["attn"]["wk"] == P(None, None, "model", None)
+
+
+def test_param_pspecs_drop_indivisible():
+    mesh = jax.make_mesh((2,), ("model",)) if jax.device_count() >= 2 else None
+    if mesh is None:
+        # emulate with axis size from a 1-device mesh reshaped: use the rule fn directly
+        from repro.launch.sharding import _resolve
+
+        spec = _resolve(("model", None), (3, 16), ShardingOptions(), {"model": 2})
+        assert spec == P(None, None)  # 3 % 2 != 0 -> dropped
+    else:
+        params = {"wq": jax.ShapeDtypeStruct((3, 16), "float32")}
+        specs = param_pspecs(params, ShardingOptions(), mesh)
+        assert specs["wq"] == P(None, None)
+
+
+def test_moe_expert_rule():
+    mesh = _mesh()
+    params = {"ffn": {"we_up": jax.ShapeDtypeStruct((4, 16, 64, 32), "float32")}}
+    specs = param_pspecs(params, ShardingOptions(fsdp=True), mesh)
+    assert specs["ffn"]["we_up"] == P(None, "model", "data", None)
+
+
+def test_cache_pspecs_seq_axis():
+    mesh = _mesh()
+    cache = {"k": jax.ShapeDtypeStruct((2, 1, 64, 4, 16), "bfloat16"),
+             "pos": jax.ShapeDtypeStruct((), "int32")}
+    specs = cache_pspecs(cache, mesh, ShardingOptions(seq_axis="model"))
+    assert specs["k"] == P(None, ("data",), "model", None, None)
+    assert specs["pos"] == P()

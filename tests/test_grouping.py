@@ -1,0 +1,60 @@
+"""Group partitioning invariants (paper §3.3)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import grouping
+
+
+@pytest.mark.parametrize("strategy", grouping.STRATEGIES)
+@pytest.mark.parametrize("n_groups", [1, 5, 20])
+def test_partition_complete_and_disjoint(nyx_small, strategy, n_groups):
+    x = jnp.asarray(nyx_small)
+    edges = grouping.compute_edges(x, n_groups, strategy)
+    assert bool(jnp.all(jnp.diff(edges) > 0)), "edges must be strictly increasing"
+    ids = grouping.assign_groups(x, edges)
+    assert int(ids.min()) >= 0 and int(ids.max()) < n_groups
+    masks = grouping.group_masks(ids, n_groups)
+    # every element in exactly one group
+    assert bool(jnp.all(masks.sum(axis=0) == 1))
+
+
+def test_quantile_balances_mass(dm_small):
+    x = jnp.asarray(dm_small)
+    n = 8
+    edges = grouping.compute_edges(x, n, "quantile")
+    ids = grouping.assign_groups(x, edges)
+    counts = np.asarray(grouping.group_stats(x, ids, n)["count"])
+    # quantile grouping should be far more balanced than range grouping
+    edges_r = grouping.compute_edges(x, n, "range")
+    counts_r = np.asarray(grouping.group_stats(x, grouping.assign_groups(x, edges_r), n)["count"])
+    assert counts.std() < counts_r.std()
+
+
+def test_group_stats_minmax_within_edges(nyx_small):
+    x = jnp.asarray(nyx_small)
+    edges = grouping.compute_edges(x, 5, "quantile")
+    ids = grouping.assign_groups(x, edges)
+    st_ = grouping.group_stats(x, ids, 5)
+    for g in range(5):
+        if st_["count"][g] > 0:
+            assert st_["min"][g] >= float(edges[0]) - 1e-3
+            assert st_["max"][g] <= float(edges[-1]) + 1e-3
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(st.floats(min_value=-1e6, max_value=1e6, allow_nan=False, width=32),
+             min_size=4, max_size=300),
+    st.integers(min_value=1, max_value=16),
+    st.sampled_from(["quantile", "range"]),
+)
+def test_assignment_property(vals, n_groups, strategy):
+    x = jnp.asarray(np.asarray(vals, np.float32))
+    edges = grouping.compute_edges(x, n_groups, strategy)
+    ids = grouping.assign_groups(x, edges)
+    assert int(ids.min()) >= 0 and int(ids.max()) < n_groups
+    # reproducibility: same edges -> same ids (decompression-side contract)
+    ids2 = grouping.assign_groups(x, edges)
+    assert bool(jnp.all(ids == ids2))

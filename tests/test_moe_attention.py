@@ -1,0 +1,109 @@
+"""MoE dispatch and attention-variant correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+from repro.models import mlp as M
+
+
+def _dense_moe_reference(params, x, cfg, act):
+    """All-experts dense evaluation weighted by router probs (no capacity)."""
+    B, S, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = jnp.einsum("td,de->te", xt, params["router"])
+    w, idx = M._route(logits, cfg)
+    if act == "silu":
+        h = jax.nn.silu(jnp.einsum("td,edf->tef", xt, params["we_gate"]))
+        h = h * jnp.einsum("td,edf->tef", xt, params["we_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("td,edf->tef", xt, params["we_up"]))
+    ye = jnp.einsum("tef,efd->ted", h, params["we_down"])  # [T,E,d]
+    onehot = jax.nn.one_hot(idx, cfg.n_experts)  # [T,k,E]
+    comb = jnp.einsum("tke,tk->te", onehot, w)
+    out = jnp.einsum("ted,te->td", ye, comb).reshape(B, S, d)
+    if "shared" in params:
+        out = out + M.apply_mlp(params["shared"], x, act)
+    return out
+
+
+@pytest.mark.parametrize("router,top_k", [("softmax", 2), ("sigmoid", 2), ("softmax", 1)])
+def test_moe_matches_dense_reference_with_ample_capacity(router, top_k):
+    cfg = M.MoEConfig(n_experts=4, top_k=top_k, d_ff=32, router=router,
+                      capacity_factor=4.0, n_shared=1, shared_d_ff=16)
+    params = M.init_moe_params(jax.random.PRNGKey(0), 16, cfg, "silu")
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 16))
+    got, aux = M.apply_moe(params, x, cfg, "silu")
+    want = _dense_moe_reference(params, x, cfg, "silu")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-3)
+    assert float(aux) >= 0
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = M.MoEConfig(n_experts=2, top_k=1, d_ff=8, capacity_factor=0.25)
+    params = M.init_moe_params(jax.random.PRNGKey(0), 8, cfg, "silu")
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 8))
+    out, _ = M.apply_moe(params, x, cfg, "silu")
+    # at capacity 0.25 most tokens are dropped -> many zero rows
+    zero_rows = (jnp.abs(out[0]).sum(-1) < 1e-6).sum()
+    assert int(zero_rows) >= 8
+
+
+def _naive_attention(q, k, v, mask):
+    H = q.shape[2] // k.shape[2]
+    kk = jnp.repeat(k, H, axis=2)
+    vv = jnp.repeat(v, H, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk) / q.shape[-1] ** 0.5
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vv)
+
+
+@pytest.mark.parametrize("mode,window", [
+    (A.MASK_CAUSAL, 0), (A.MASK_SLIDING, 3), (A.MASK_CHUNKED, 4), (A.MASK_BIDIR, 0),
+])
+def test_attend_matches_naive(mode, window):
+    B, S, H, K, D = 2, 10, 4, 2, 8
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, K, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, K, D))
+    pos = jnp.arange(S)
+    got = A.attend(q, k, v, pos, pos, mask_mode=mode, window=window, q_block=4)
+    i, j = pos[:, None], pos[None, :]
+    if mode == A.MASK_BIDIR:
+        mask = jnp.ones((S, S), bool)
+    elif mode == A.MASK_CAUSAL:
+        mask = j <= i
+    elif mode == A.MASK_SLIDING:
+        mask = (j <= i) & (j > i - window)
+    else:
+        mask = (j <= i) & (j // window == i // window)
+    want = _naive_attention(q, k, v, mask[None, None])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5, rtol=1e-4)
+
+
+def test_ring_cache_equals_full_cache_for_sliding():
+    """Sliding-window ring buffer (size=window) must reproduce full-cache decode."""
+    cfg = A.AttnConfig(n_heads=2, n_kv_heads=1, head_dim=8, d_model=16)
+    params = A.init_gqa_params(jax.random.PRNGKey(0), cfg)
+    S, W = 12, 4
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, S, 16))
+    pos = jnp.arange(S)
+    full, _ = A.gqa_attention(params, cfg, x, pos, mask_mode=A.MASK_SLIDING, window=W)
+    ring = A.init_gqa_cache(1, S, cfg, window=W, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        y, ring = A.gqa_attention(params, cfg, x[:, t : t + 1], pos[t : t + 1],
+                                  mask_mode=A.MASK_SLIDING, window=W, cache=ring)
+        outs.append(y)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full), atol=1e-5, rtol=1e-4)
+
+
+def test_mla_decode_cache_is_latent_sized():
+    mla = A.MLAConfig(q_lora=16, kv_lora=8, rope_dim=4, nope_dim=8, v_dim=8)
+    cfg = A.AttnConfig(n_heads=2, n_kv_heads=2, head_dim=12, d_model=16, mla=mla)
+    cache = A.init_mla_cache(3, 64, cfg)
+    assert cache["c_kv"].shape == (3, 64, 8)      # latent, not per-head
+    assert cache["k_rope"].shape == (3, 64, 4)    # shared rope key

@@ -1,0 +1,108 @@
+"""Optimizer: AdamW reference match, compressed moments, gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import AdamWConfig, adamw
+from repro.optim.grad_compress import (
+    GradCompressConfig,
+    apply as gc_apply,
+    init_ef,
+    quantize_leaf,
+)
+from repro.optim.schedule import step_decay, warmup_cosine
+
+
+def _rosenbrock_ish(p):
+    return jnp.sum((p["a"] - 1.0) ** 2) + 2.0 * jnp.sum((p["b"] + 0.5) ** 2)
+
+
+@pytest.mark.parametrize("moment_dtype", ["fp32", "bf16", "int8"])
+def test_adamw_converges(moment_dtype):
+    cfg = AdamWConfig(moment_dtype=moment_dtype)
+    params = {"a": jnp.zeros(4), "b": jnp.ones(3)}
+    opt = adamw.init(params, cfg)
+    loss0 = float(_rosenbrock_ish(params))
+    for i in range(300):
+        g = jax.grad(_rosenbrock_ish)(params)
+        params, opt = adamw.update(params, opt, g, 0.05, cfg, jax.random.PRNGKey(i))
+    assert float(_rosenbrock_ish(params)) < loss0 * 0.05
+
+
+def test_adamw_fp32_matches_manual_reference():
+    cfg = AdamWConfig()
+    p = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    p_np = np.asarray(p["w"]).copy()  # update() donates its inputs
+    opt = adamw.init(p, cfg)
+    g = {"w": jnp.asarray([0.1, 0.2, -0.3])}
+    g_np = np.asarray(g["w"]).copy()
+    p2, opt2 = adamw.update(p, opt, g, 0.01, cfg)
+    # manual Adam step 1
+    m = 0.1 * g_np
+    v = 0.001 * g_np ** 2
+    mh = m / (1 - 0.9)
+    vh = v / (1 - 0.999)
+    want = p_np - 0.01 * mh / (np.sqrt(vh) + 1e-8)
+    np.testing.assert_allclose(np.asarray(p2["w"]), want, rtol=1e-5)
+
+
+def test_int8_moments_are_int8():
+    cfg = AdamWConfig(moment_dtype="int8")
+    p = {"w": jnp.ones((32, 32))}
+    opt = adamw.init(p, cfg)
+    assert opt["m"]["w"]["q"].dtype == jnp.int8
+    g = {"w": jnp.full((32, 32), 0.01)}
+    _, opt2 = adamw.update(p, opt, g, 0.01, cfg, jax.random.PRNGKey(0))
+    assert opt2["m"]["w"]["q"].dtype == jnp.int8
+
+
+def test_schedules():
+    s = step_decay(1e-3, 0.5, 10)
+    assert float(s(0)) == pytest.approx(1e-3)
+    assert float(s(10)) == pytest.approx(5e-4)
+    w = warmup_cosine(1e-3, 10, 100)
+    assert float(w(0)) == pytest.approx(1e-4)  # (step+1)/warmup: lr > 0 at step 0
+    assert float(w(10)) == pytest.approx(1e-3, rel=1e-3)
+    assert float(w(100)) < float(w(50))
+
+
+# -- gradient compression ------------------------------------------------------
+
+
+def test_quantize_leaf_error_bound():
+    g = jax.random.normal(jax.random.PRNGKey(0), (128,))
+    err = jnp.zeros(128)
+    cfg = GradCompressConfig(rel_eb=1e-2, code_dtype="int16")
+    codes, scale, new_err = quantize_leaf(g, err, cfg)
+    ghat = codes.astype(jnp.float32) * scale
+    eb = 1e-2 * float(jnp.sqrt(jnp.mean(g ** 2)))
+    assert float(jnp.max(jnp.abs(ghat - g))) <= eb * (1 + 1e-4)
+
+
+def test_error_feedback_makes_sgd_converge():
+    """With EF, heavily-quantized SGD still converges (beyond-paper §8.3)."""
+    w = jnp.asarray([5.0, -3.0])
+    cfg = GradCompressConfig(rel_eb=0.5, code_dtype="int8")  # brutal quantization
+    ef = init_ef({"w": w})
+    cur = {"w": w}
+    for _ in range(400):
+        g = {"w": 2 * (cur["w"] - jnp.asarray([1.0, 2.0]))}
+        gq, ef = gc_apply(g, ef, cfg)
+        cur = {"w": cur["w"] - 0.05 * gq["w"]}
+    np.testing.assert_allclose(np.asarray(cur["w"]), [1.0, 2.0], atol=0.05)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**30), st.sampled_from(["int8", "int16"]))
+def test_ef_residual_bounded_property(seed, dtype):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=64).astype(np.float32))
+    cfg = GradCompressConfig(rel_eb=0.1, code_dtype=dtype)
+    codes, scale, new_err = quantize_leaf(g, jnp.zeros(64), cfg)
+    bound = 127 if dtype == "int8" else 32767
+    assert int(jnp.max(jnp.abs(codes.astype(jnp.int32)))) <= bound
+    # EF residual == true quantization error
+    ghat = codes.astype(jnp.float32) * scale
+    np.testing.assert_allclose(np.asarray(new_err), np.asarray(g - ghat), atol=1e-6)

