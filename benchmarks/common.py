@@ -1,22 +1,43 @@
-"""Shared benchmark config. REPRO_BENCH_FAST=1 shrinks everything for CI."""
+"""Shared benchmark config. REPRO_BENCH_FAST=1 shrinks everything for CI;
+REPRO_BENCH_SMOKE=1 (``benchmarks/run.py --fast``) shrinks harder so the
+whole harness runs in seconds as a rot check (tests/test_bench_smoke.py)."""
 from __future__ import annotations
 
 import os
 import time
 
 FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
 
 # CPU-budget settings (paper used 512^3 on 4x RTX4090; we scale down and
 # validate trends — EXPERIMENTS.md §Reproduction-notes).  The single-core
 # container bounds the budget: 48^3 volumes, 80 epochs, GWLZ-8 for the REB
 # sweep (group count scaled to volume; the group-count sweep itself is
 # table3).
-VOLUME = (32, 32, 32) if FAST else (48, 48, 48)
-EPOCHS = 30 if FAST else 80
-REBS = (5e-3, 1e-3, 1e-4) if FAST else (5e-3, 1e-3, 1e-4, 1e-5)
-GROUPS = (1, 4) if FAST else (1, 5, 10, 20)
-FIELDS = ("temperature",) if FAST else ("temperature", "dark_matter_density")
-TABLE2_GROUPS = 4 if FAST else 8
+if SMOKE:
+    VOLUME = (16, 16, 16)
+    EPOCHS = 2
+    REBS = (1e-3,)
+    GROUPS = (1, 2)
+    FIELDS = ("temperature",)
+    TABLE2_GROUPS = 2
+elif FAST:
+    VOLUME = (32, 32, 32)
+    EPOCHS = 30
+    REBS = (5e-3, 1e-3, 1e-4)
+    GROUPS = (1, 4)
+    FIELDS = ("temperature",)
+    TABLE2_GROUPS = 4
+else:
+    VOLUME = (48, 48, 48)
+    EPOCHS = 80
+    REBS = (5e-3, 1e-3, 1e-4, 1e-5)
+    GROUPS = (1, 5, 10, 20)
+    FIELDS = ("temperature", "dark_matter_density")
+    TABLE2_GROUPS = 8
+
+# entropy-stage isolation benchmark volume (the acceptance target is 64^3)
+ENTROPY_VOLUME = (32, 32, 32) if SMOKE else (64, 64, 64)
 
 
 def timed(fn, *args, repeats=3, **kw):

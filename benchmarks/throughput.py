@@ -1,15 +1,43 @@
 """Compression/decompression + kernel throughput (host CPU; the TPU path is
-characterized by the dry-run roofline, EXPERIMENTS.md §Roofline)."""
+characterized by the dry-run roofline, EXPERIMENTS.md §Roofline).
+
+Times every entropy backend (zlib / huffman / huffman+zlib) end-to-end and
+per-stage, plus the entropy-stage isolation benchmark: chunked vectorized
+Huffman decode vs the seed per-symbol walk on a 64^3 code tensor (the
+acceptance target for the chunked codec is >= 20x)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import FAST, VOLUME, emit, timed
+from benchmarks.common import ENTROPY_VOLUME, VOLUME, emit, timed
 from repro.core import enhancer as E
 from repro.data import nyx_like_field
 from repro.kernels import ops
 from repro.sz import SZCompressor
+from repro.sz.entropy import decode_codes, encode_codes, encode_codes_legacy
+
+BACKENDS = ("zlib", "huffman", "huffman+zlib")
+
+
+def _entropy_stage_bench() -> None:
+    """Isolated entropy-stage decode: new chunked format vs seed format."""
+    x = jnp.asarray(nyx_like_field(ENTROPY_VOLUME, "temperature", seed=3))
+    eb = 1e-3 * float(jnp.max(x) - jnp.min(x))
+    codes = np.asarray(ops.lorenzo_quant_op(x, eb, use_pallas=False))
+    raw_mb = codes.size * 4
+
+    blob_new = encode_codes(codes, "huffman+zlib")
+    blob_old = encode_codes_legacy(codes, "huffman+zlib")
+    out_new, us_new = timed(lambda: decode_codes(blob_new, codes.shape), repeats=3)
+    out_old, us_old = timed(lambda: decode_codes(blob_old, codes.shape), repeats=1)
+    assert np.array_equal(out_new, codes), "chunked decode must be byte-identical"
+    assert np.array_equal(out_old, codes), "legacy decode must be byte-identical"
+    side = ENTROPY_VOLUME[0]
+    emit(f"throughput/entropy/hcz_decode_{side}c", us_new, f"MBps={raw_mb/us_new:.1f}")
+    emit(f"throughput/entropy/hz_seed_decode_{side}c", us_old, f"MBps={raw_mb/us_old:.1f}")
+    emit(f"throughput/entropy/decode_speedup_{side}c", us_new,
+         f"speedup_vs_seed={us_old/us_new:.1f}x;overhead={(len(blob_new)/len(blob_old)-1)*100:.2f}%")
 
 
 def main() -> None:
@@ -17,11 +45,20 @@ def main() -> None:
     nbytes = x.size * 4
 
     for pred in ("lorenzo", "interp"):
-        comp = SZCompressor(predictor=pred, backend="zlib")
-        (art, recon), us = timed(lambda: comp.compress(x, rel_eb=1e-3), repeats=2)
-        emit(f"throughput/compress/{pred}", us, f"MBps={nbytes/us:.1f};cr={nbytes/art.nbytes:.1f}")
-        _, us = timed(lambda: comp.decompress(art), repeats=2)
-        emit(f"throughput/decompress/{pred}", us, f"MBps={nbytes/us:.1f}")
+        for backend in BACKENDS:
+            comp = SZCompressor(predictor=pred, backend=backend)
+            (art, recon), us = timed(lambda: comp.compress(x, rel_eb=1e-3), repeats=2)
+            emit(f"throughput/compress/{pred}/{backend}", us,
+                 f"MBps={nbytes/us:.1f};cr={nbytes/art.nbytes:.1f}")
+            _, us = timed(lambda: comp.decompress(art), repeats=2)
+            emit(f"throughput/decompress/{pred}/{backend}", us, f"MBps={nbytes/us:.1f}")
+            # per-stage: entropy decode alone (the former Python-loop bottleneck)
+            shape = art.padded_shape if pred == "interp" else art.shape
+            codes_mb = int(np.prod(shape)) * 4
+            _, us = timed(lambda: decode_codes(art.code_blob, shape), repeats=3)
+            emit(f"throughput/entropy_decode/{pred}/{backend}", us, f"MBps={codes_mb/us:.1f}")
+
+    _entropy_stage_bench()
 
     # kernels (interpret mode on CPU: correctness-path timing only)
     _, us = timed(lambda: ops.lorenzo_quant_op(x, 1.0, use_pallas=False).block_until_ready(), repeats=3)
@@ -40,6 +77,12 @@ def main() -> None:
     xf = x.ravel()[:n]
     _, us = timed(lambda: ops.group_hist_op(xf.reshape(-1, 128), edges, n_groups=20, use_pallas=False)[0].block_until_ready(), repeats=3)
     emit("throughput/kernel/group_hist_ref", us, f"MBps={n*4/us:.1f}")
+
+    codes_i32 = jnp.asarray(np.asarray(ops.lorenzo_quant_op(x, 1.0, use_pallas=False)))
+    span = int(codes_i32.max() - codes_i32.min()) + 1
+    shifted = codes_i32 - codes_i32.min()
+    _, us = timed(lambda: ops.symbol_hist_op(shifted, n_bins=span, use_pallas=False).block_until_ready(), repeats=3)
+    emit("throughput/kernel/symbol_hist_ref", us, f"MBps={n*4/us:.1f}")
 
 
 if __name__ == "__main__":

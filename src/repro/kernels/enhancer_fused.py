@@ -4,7 +4,7 @@ The whole model (two 3x3 convs, 9 channels, BN, ReLU — ~200 params) fits in
 VMEM next to one slice, so the fused kernel runs slice-in/slice-out with zero
 intermediate HBM traffic (4 round-trips saved vs the layer-by-layer XLA path).
 Convs are expressed as 9 shifted taps feeding one [H*W, 9]x[9, C] MXU dot —
-the same shift+matmul form the trainer uses (DESIGN.md §3.4).
+the same shift+matmul form the trainer uses (see repro.core.enhancer._conv).
 
 Grid: one step per slice in the batch.
 """

@@ -1,9 +1,13 @@
-"""Fused group-assignment + histogram Pallas kernel (GWLZ grouping pass).
+"""Fused group-assignment + histogram Pallas kernels (GWLZ grouping pass +
+entropy-stage symbol counting).
 
-Computes per-element group ids from value-range edges and the global group
-histogram in one sweep over the volume (flattened to [N, 128] lanes).  The
-histogram accumulates in a VMEM-resident output block revisited by every grid
-step (TPU grid steps are sequential), initialized at step 0.
+``group_hist`` computes per-element group ids from value-range edges and the
+global group histogram in one sweep over the volume (flattened to [N, 128]
+lanes).  ``symbol_hist`` is the general integer-symbol histogram the entropy
+stage uses for Huffman frequency counting (``HuffmanCodec.fit``), so code
+tensors never go through a host-side sort.  Both accumulate in a
+VMEM-resident output block revisited by every grid step (TPU grid steps are
+sequential), initialized at step 0.
 """
 from __future__ import annotations
 
@@ -30,6 +34,39 @@ def _kernel(x_ref, edges_ref, ids_ref, hist_ref, *, n_groups: int):
         hist_ref[...] = jnp.zeros_like(hist_ref)
 
     hist_ref[...] += partial_hist
+
+
+def _symbol_kernel(s_ref, hist_ref, *, n_bins: int):
+    i = pl.program_id(0)
+    s = s_ref[...]  # [BB, 128] int32 bin ids in [0, n_bins)
+    onehot = (s[:, :, None] == jax.lax.broadcasted_iota(jnp.int32, (1, 1, n_bins), 2)).astype(jnp.int32)
+    partial_hist = onehot.sum((0, 1))  # [B]
+
+    @pl.when(i == 0)
+    def _():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    hist_ref[...] += partial_hist
+
+
+@partial(jax.jit, static_argnames=("n_bins", "block_rows", "interpret"))
+def symbol_hist(s: jax.Array, *, n_bins: int, block_rows: int = 8,
+                interpret: bool = True) -> jax.Array:
+    """s: [N, 128] int32 with values in [0, n_bins) -> hist [n_bins] int32.
+
+    ``block_rows`` trades VMEM for grid steps: the one-hot intermediate is
+    [BB, 128, n_bins] int32, so callers shrink BB as the alphabet grows."""
+    N = s.shape[0]
+    bb = min(block_rows, N)
+    assert N % bb == 0, (N, bb)
+    return pl.pallas_call(
+        partial(_symbol_kernel, n_bins=n_bins),
+        grid=(N // bb,),
+        in_specs=[pl.BlockSpec((bb, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((n_bins,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n_bins,), jnp.int32),
+        interpret=interpret,
+    )(s)
 
 
 @partial(jax.jit, static_argnames=("n_groups", "block_rows", "interpret"))

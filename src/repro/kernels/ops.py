@@ -11,7 +11,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.enhancer_fused import enhancer_fused
-from repro.kernels.group_hist import group_hist
+from repro.kernels.group_hist import group_hist, symbol_hist
 from repro.kernels.lorenzo_quant import lorenzo_quant
 
 
@@ -37,6 +37,32 @@ def enhancer_fused_op(x, params, bn_state, *, use_pallas: bool | None = None,
     if use:
         return enhancer_fused(*args, interpret=not _on_tpu() if interpret is None else interpret)
     return ref.enhancer_fused_ref(*args)
+
+
+def symbol_hist_op(symbols, *, n_bins: int, use_pallas: bool | None = None,
+                   interpret: bool | None = None):
+    """Integer-symbol histogram over any-shaped int32 input.
+
+    Values outside [0, n_bins) are ignored (they land in an internal
+    sentinel bin, along with lane padding). Returns hist int32 [n_bins]."""
+    flat = jnp.reshape(symbols, (-1,))
+    sentinel = n_bins
+    bins = n_bins + 1
+    flat = jnp.where((flat >= 0) & (flat < n_bins), flat, sentinel).astype(jnp.int32)
+    # block size bounds the [BB, 128, bins] one-hot intermediate to ~1M cells
+    bb = max(1, min(256, 8192 // bins))
+    rows = -(-max(int(flat.shape[0]), 1) // 128)
+    rows = -(-rows // bb) * bb
+    pad = rows * 128 - flat.shape[0]
+    flat = jnp.concatenate([flat, jnp.full((pad,), sentinel, jnp.int32)])
+    x2 = flat.reshape(rows, 128)
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        hist = symbol_hist(x2, n_bins=bins, block_rows=bb,
+                           interpret=not _on_tpu() if interpret is None else interpret)
+    else:
+        hist = ref.symbol_hist_ref(x2, bins)
+    return hist[:n_bins]
 
 
 def group_hist_op(x, edges, *, n_groups: int, use_pallas: bool | None = None,

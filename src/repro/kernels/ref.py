@@ -30,6 +30,13 @@ def enhancer_fused_ref(x: jax.Array, w1, b1, gamma, beta, mean, var, w2, b2) -> 
     return out[..., 0]
 
 
+def symbol_hist_ref(s: jax.Array, n_bins: int) -> jax.Array:
+    """Integer-symbol histogram. s: [N, 128] int32 in [0, n_bins).
+
+    Returns hist int32 [n_bins]."""
+    return jnp.zeros((n_bins,), jnp.int32).at[s.ravel()].add(1)
+
+
 def group_hist_ref(x: jax.Array, edges: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Group-id assignment + histogram. x: [N, 128]; edges: [G+1].
 

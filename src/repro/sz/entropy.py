@@ -1,20 +1,48 @@
-"""Host-side entropy stage: canonical Huffman + zlib backends.
+"""Host-side entropy stage: chunked canonical Huffman + zlib backends.
 
 Bitstream packing is byte-sequential with no TPU analogue (real SZ GPU
-pipelines also run it on host) — see DESIGN.md §3.5.  The TPU side hands this
-module a dense int32 code tensor; encoding is fully vectorized numpy, decoding
-is a table-driven walk (fast enough for benchmark volumes).
+pipelines also run it on host).  The TPU side hands this module a dense int32
+code tensor; encoding is fully vectorized numpy, decoding is a chunked,
+table-driven, vectorized walk: the symbol stream is split into fixed-size
+chunks at encode time (per-chunk bit lengths live in the header), and every
+chunk steps forward in lockstep — one word-level gather against a k-bit
+multi-symbol canonical-Huffman LUT decodes all complete codes in the window
+(codes longer than k bits resolve through one searchsorted over the
+left-aligned codewords).  Chunk lanes are dispatched across cores with
+``concurrent.futures``.
+
+Blob layout, tag registry, and backward compatibility (legacy ``hf``/``hz``
+blobs still decode through the seed per-symbol walk) are specified in
+``docs/ENTROPY_FORMAT.md``.
 """
 from __future__ import annotations
 
 import heapq
+import os
 import struct
+import sys
 import zlib
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
+from typing import NamedTuple
 
 import numpy as np
 
 _MAGIC = b"RPRE"
+
+DEFAULT_CHUNK = 256  # symbols per independently decodable chunk
+_LUT_BITS = 12  # primary decode-table width cap (2**k uint64 entries)
+_FMT_CODE_LEN = 32  # FROZEN in the hc/hZ blob format (chunk-table width rule)
+_MAX_CODE_LEN = _FMT_CODE_LEN  # encoder policy; must never exceed _FMT_CODE_LEN
+_ACCEL_SPAN = 4096  # dense alphabet span served by the symbol_hist kernel
+_DENSE_SPAN = 1 << 22  # host bincount beyond this falls back to np.unique
+
+
+def _chunk_bits_dtype(chunk_size: int) -> str:
+    """Chunk-table entry width: u16 whenever a full chunk of max-length codes
+    fits.  Part of the hc/hZ wire format — the rule is pinned to the frozen
+    ``_FMT_CODE_LEN``, never to current encoder policy."""
+    return "<u2" if chunk_size * _FMT_CODE_LEN <= 0xFFFF else "<u4"
 
 
 def shannon_bits(symbols: np.ndarray) -> float:
@@ -32,6 +60,8 @@ def shannon_bits(symbols: np.ndarray) -> float:
 def _code_lengths(counts: np.ndarray) -> np.ndarray:
     """Huffman code length per symbol from frequency counts (heap build)."""
     n = len(counts)
+    if n == 0:
+        return np.zeros(0, np.int64)
     if n == 1:
         return np.array([1], np.int64)
     heap = [(int(c), i) for i, c in enumerate(counts)]
@@ -51,6 +81,17 @@ def _code_lengths(counts: np.ndarray) -> np.ndarray:
     return depth[:n]
 
 
+def _limited_code_lengths(counts: np.ndarray, max_len: int = _MAX_CODE_LEN) -> np.ndarray:
+    """Code lengths capped at ``max_len`` by count-halving (pathological skew
+    only; equal counts give a balanced tree, so the loop terminates)."""
+    c = np.asarray(counts, np.int64)
+    lengths = _code_lengths(c)
+    while lengths.size and int(lengths.max()) > max_len:
+        c = (c + 1) >> 1
+        lengths = _code_lengths(c)
+    return lengths
+
+
 def _canonical_codes(lengths: np.ndarray) -> np.ndarray:
     """Assign canonical codewords (as uint64) given code lengths."""
     order = np.lexsort((np.arange(len(lengths)), lengths))
@@ -66,29 +107,251 @@ def _canonical_codes(lengths: np.ndarray) -> np.ndarray:
     return codes
 
 
+def _accel_default() -> bool:
+    try:
+        import jax
+
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def _accel_hist(flat: np.ndarray, lo: int, span: int) -> np.ndarray:
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    shifted = jnp.asarray((flat.astype(np.int64) - lo).astype(np.int32))
+    return np.asarray(ops.symbol_hist_op(shifted, n_bins=span), np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized chunk decode machinery
+# ---------------------------------------------------------------------------
+
+
+def _sliding_words(stream: bytes, tail_pad: int = 16) -> tuple[np.ndarray, np.ndarray]:
+    """(words, bytes) where words[i] holds stream[i:i+8] big-endian in uint64.
+
+    Built once per decode so the per-step window gather is a single indexed
+    load instead of eight.  ``tail_pad`` extra zero bytes keep gathers in
+    bounds — decode_chunked sizes it so finished lanes can overrun the
+    stream end harmlessly instead of clamping positions every step."""
+    raw = np.frombuffer(stream, np.uint8)
+    padded = np.zeros(raw.size + tail_pad, np.uint64)
+    padded[: raw.size] = raw
+    words = np.zeros(raw.size + tail_pad - 7, np.uint64)
+    for j in range(8):
+        words = (words << np.uint64(8)) | padded[j : j + words.size]
+    return words, padded
+
+
+def _gather_window(words: np.ndarray, padded: np.ndarray, p: np.ndarray) -> np.ndarray:
+    """64-bit MSB-aligned window starting at bit position p (vectorized)."""
+    byte = p >> np.uint64(3)
+    sh = p & np.uint64(7)
+    # sh == 0 is safe: x >> 8 on the uint64-widened byte is 0, not UB
+    return (words[byte] << sh) | (padded[byte + 8] >> (np.uint64(8) - sh))
+
+
+class _Tables(NamedTuple):
+    """Canonical decode tables (per codec, built lazily)."""
+
+    max_len: int
+    k: int  # single-symbol LUT width in bits
+    first_code: np.ndarray  # per-length canonical decode bases (bit walk)
+    first_idx: np.ndarray
+    count_at: np.ndarray
+    order: np.ndarray  # symbol ids in canonical order
+    lut: np.ndarray  # single-symbol LUT: (sym+1)<<8 | len, 0 = escape
+    cw_left: np.ndarray  # left-aligned canonical codewords (monotone)
+    L_sorted: np.ndarray  # code lengths in canonical order
+
+
+class _MultiTables(NamedTuple):
+    tables: _Tables
+    mlut: np.ndarray  # multi-symbol probe LUT (see _multi_lut)
+    B: int  # bits per symbol id slot
+    S: int  # id slots per probe entry
+
+
+def _resolve_long(w: np.ndarray, tables: _Tables) -> tuple[np.ndarray, np.ndarray]:
+    """Escape path: windows whose code is longer than the LUT width.
+
+    A complete prefix code partitions the 64-bit window space into intervals
+    that start at the left-aligned codewords, so one searchsorted resolves
+    any window regardless of code length."""
+    i = np.searchsorted(tables.cw_left, w, side="right") - 1
+    return tables.order[i], tables.L_sorted[i].astype(np.uint64)
+
+
+def _id_shift0(B: int) -> int:
+    """Bit offset of the first symbol id in a packed probe entry.
+
+    Entries are byte-aligned so symbol expansion is a plain byte-view
+    extraction: byte 0 = count, byte 1 = consumed bits, ids from byte 2
+    (byte 4 for B=32 so the id stays dtype-aligned)."""
+    return 32 if B == 32 else 16
+
+
+def _multi_lut(lut1: np.ndarray, k: int, B: int, S: int) -> np.ndarray:
+    """Multi-symbol LUT: entry packs count (byte 0), consumed bits (byte 1)
+    and up to S symbol ids (B-bit slots from ``_id_shift0``), greedily
+    covering every complete code in the k-bit window.
+
+    ``lut1`` is the single-symbol table ((sym+1)<<8|len, 0 = escape).  An
+    entry of 0 means even the first code overflows the window (escape)."""
+    size = 1 << k
+    W = np.arange(size, dtype=np.uint64)
+    kmask = np.uint64(size - 1)
+    consumed = np.zeros(size, np.uint64)
+    count = np.zeros(size, np.uint64)
+    acc = np.zeros(size, np.uint64)
+    active = np.ones(size, bool)
+    base = _id_shift0(B)
+    for j in range(S):
+        sub = (W << consumed) & kmask
+        e1 = lut1[sub]
+        ln = e1 & np.uint64(0xFF)
+        ok = active & (e1 != 0) & (consumed + ln <= k)
+        if not ok.any():
+            break
+        sym = (e1[ok] >> np.uint64(8)) - np.uint64(1)
+        acc[ok] |= sym << np.uint64(base + j * B)
+        consumed[ok] += ln[ok]
+        count[ok] += np.uint64(1)
+        active = ok
+    return acc | (consumed << np.uint64(8)) | count
+
+
+def _decode_lanes(words, padded, bit_pos, targets, out2d, mtables) -> int:
+    """Lockstep decode: every lane (= chunk) runs one LUT probe per step.
+
+    A probe decodes *all* complete codes inside its k-bit window (up to S,
+    packed by ``_multi_lut``), so skewed streams advance several symbols per
+    step.  ``out2d`` ([chunk_size, n_lanes] — step-major so the per-step
+    store is contiguous) receives the raw packed entries; the caller expands
+    them to symbols in one vectorized pass.  Finished lanes keep probing
+    harmlessly into the zero tail pad — no per-lane bookkeeping in the hot
+    loop.  Returns the number of steps taken."""
+    tables, mlut = mtables.tables, mtables.mlut
+    shift_k = np.uint64(64 - tables.k)
+    pos = bit_pos.astype(np.uint64)
+    cur = np.zeros(pos.size, np.uint64)
+    targets = targets.astype(np.uint64)
+    spill = tables.max_len > 56  # legacy-crafted deep tables need the 9th byte
+    it = 0
+    while not (cur >= targets).all():
+        if it >= out2d.shape[0]:  # every probe yields >= 1 symbol
+            raise ValueError("corrupt Huffman stream: chunk did not terminate")
+        p = pos  # finished lanes overrun into the zero tail pad harmlessly
+        if spill:
+            w = _gather_window(words, padded, p)
+        else:
+            w = words[p >> np.uint64(3)] << (p & np.uint64(7))
+        e = mlut[w >> shift_k]
+        if not e.all():  # 0 entries = first code longer than the LUT width
+            mi = np.flatnonzero(e == 0)
+            s2, l2 = _resolve_long(w[mi], tables)
+            e[mi] = ((s2.astype(np.uint64) << np.uint64(_id_shift0(mtables.B)))
+                     | (l2 << np.uint64(8)) | np.uint64(1))
+        out2d[it] = e
+        pos = p + ((e >> np.uint64(8)) & np.uint64(0xFF))
+        cur += e & np.uint64(0xFF)
+        it += 1
+    return it
+
+
+def _expand_entries(used, targets, n_symbols, B, S) -> np.ndarray:
+    """Unpack [n_lanes, n_steps] probe entries into the flat symbol-id stream.
+
+    Each entry carries up to S byte-aligned symbol ids.  Because every lane
+    owns a contiguous output region and probes emit ids in stream order, a
+    single boolean extraction over the byte-view id slots in row-major
+    order IS the symbol stream — no shifts, no scatter.  Overshoot ids
+    (probes that crossed a chunk boundary) are dropped by the target
+    clamp."""
+    C, niter = used.shape
+    cnts = (used & np.uint64(0xFF)).astype(np.int32)  # byteorder-safe
+    excl = np.cumsum(cnts, axis=1, dtype=np.int32) - cnts
+    take_n = np.minimum(cnts, np.maximum(targets[:, None].astype(np.int32) - excl, 0))
+    if int(take_n.sum()) != n_symbols:
+        raise ValueError("corrupt Huffman stream: symbol count mismatch")
+    sel = np.arange(S) < take_n[..., None]
+    if sys.byteorder == "little":
+        off = _id_shift0(B) // 8
+        if B == 8:
+            ids = used.view(np.uint8).reshape(C, niter, 8)[:, :, off : off + S]
+        elif B == 16:
+            ids = used.view(np.uint16).reshape(C, niter, 4)[:, :, off // 2 : off // 2 + S]
+        else:
+            ids = used.view(np.uint32).reshape(C, niter, 2)[:, :, off // 4 : off // 4 + S]
+    else:  # pragma: no cover — big-endian hosts take the shift path
+        mask = np.uint64((1 << B) - 1)
+        ids = np.stack([(used >> np.uint64(_id_shift0(B) + j * B)) & mask
+                        for j in range(S)], axis=-1)
+    return ids[sel].astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Codec
+# ---------------------------------------------------------------------------
+
+
 @dataclass
 class HuffmanCodec:
-    """Canonical Huffman over a dense alphabet produced by np.unique remap."""
+    """Canonical Huffman over a dense alphabet.
+
+    ``fit`` counts symbol frequencies through the ``symbol_hist`` accelerator
+    op (dense-span alphabets; host bincount / np.unique otherwise), so the
+    full volume never goes through a host sort."""
 
     alphabet: np.ndarray  # original symbol values, sorted
     lengths: np.ndarray
     codes: np.ndarray
 
     @staticmethod
-    def fit(symbols: np.ndarray) -> "HuffmanCodec":
-        alphabet, inv, counts = np.unique(symbols, return_inverse=True, return_counts=True)
-        lengths = _code_lengths(counts)
-        codes = _canonical_codes(lengths)
-        codec = HuffmanCodec(alphabet, lengths, codes)
+    def fit(symbols: np.ndarray, *, use_accel: bool | None = None) -> "HuffmanCodec":
+        flat = np.ascontiguousarray(symbols).ravel()
+        if flat.size == 0:
+            empty = np.zeros(0, np.int64)
+            return HuffmanCodec(flat[:0].copy(), empty, empty.astype(np.uint64))
+        dense_ok = np.issubdtype(flat.dtype, np.integer)
+        if dense_ok:
+            lo, hi = int(flat.min()), int(flat.max())
+            span = hi - lo + 1
+            dense_ok = span <= _DENSE_SPAN
+        if dense_ok:
+            accel = use_accel if use_accel is not None else _accel_default()
+            shifted = flat.astype(np.int64) - lo
+            if accel and span <= _ACCEL_SPAN:
+                counts_full = _accel_hist(flat, lo, span)
+            else:
+                counts_full = np.bincount(shifted, minlength=span)
+            nz = np.flatnonzero(counts_full)
+            alphabet = (nz + lo).astype(flat.dtype)
+            counts = counts_full[nz]
+            rank = np.full(span, -1, np.int64)
+            rank[nz] = np.arange(nz.size)
+            inv = rank[shifted]
+        else:
+            alphabet, inv, counts = np.unique(flat, return_inverse=True, return_counts=True)
+        lengths = _limited_code_lengths(counts)
+        codec = HuffmanCodec(alphabet, lengths, _canonical_codes(lengths))
         codec._inv = inv  # cache the remap for the immediate encode
         return codec
 
     # -- encode (vectorized) ------------------------------------------------
-    def encode(self, symbols: np.ndarray) -> bytes:
-        inv = getattr(self, "_inv", None)
-        if inv is None or inv.size != symbols.size:
-            inv = np.searchsorted(self.alphabet, symbols.ravel())
-        lens = self.lengths[inv]
+    def _encode_bits(self, symbols: np.ndarray) -> tuple[np.ndarray, np.ndarray, int]:
+        """Pack the code stream; returns (packed bytes, per-symbol cumulative
+        bit ends, total bit count)."""
+        flat = np.ascontiguousarray(symbols).ravel()
+        # the fit-time remap is one-shot: it describes the fitted array, and a
+        # size match alone can't prove `symbols` is that array
+        inv = self.__dict__.pop("_inv", None)
+        if inv is None or inv.size != flat.size:
+            inv = np.searchsorted(self.alphabet, flat)
+        lens = self.lengths[inv].astype(np.int64)
         cws = self.codes[inv]
         total = int(lens.sum())
         ends = np.cumsum(lens)
@@ -99,33 +362,76 @@ class HuffmanCodec:
         pos_in_code = bit_idx - starts[sym_of_bit]
         shift = (lens[sym_of_bit] - 1 - pos_in_code).astype(np.uint64)
         bits = ((cws[sym_of_bit] >> shift) & np.uint64(1)).astype(np.uint8)
-        packed = np.packbits(bits)
+        return np.packbits(bits), ends, total
+
+    def encode(self, symbols: np.ndarray) -> bytes:
+        packed, _, total = self._encode_bits(symbols)
         return struct.pack("<Q", total) + packed.tobytes()
 
-    # -- decode (table-driven walk) -----------------------------------------
-    def decode(self, blob: bytes, n_symbols: int) -> np.ndarray:
-        (total,) = struct.unpack_from("<Q", blob, 0)
-        bits = np.unpackbits(np.frombuffer(blob, np.uint8, offset=8))[:total]
-        # canonical decode tables: for each length, first code + index base
-        max_len = int(self.lengths.max())
-        order = np.lexsort((np.arange(len(self.lengths)), self.lengths))
-        sorted_syms = order
+    # -- decode tables -------------------------------------------------------
+    def _decode_tables(self):
+        cached = getattr(self, "_tables", None)
+        if cached is not None:
+            return cached
+        n = len(self.lengths)
+        max_len = int(self.lengths.max()) if n else 0
+        k = min(max_len, _LUT_BITS)
+        order = np.lexsort((np.arange(n), self.lengths))
+        count_at = np.bincount(self.lengths.astype(np.int64), minlength=max_len + 2)
         first_code = np.zeros(max_len + 2, np.int64)
         first_idx = np.zeros(max_len + 2, np.int64)
-        count_at = np.bincount(self.lengths.astype(np.int64), minlength=max_len + 1)
-        code = 0
-        idx = 0
+        code = idx = 0
         for L in range(1, max_len + 1):
             first_code[L] = code
             first_idx[L] = idx
             code = (code + count_at[L]) << 1
             idx += count_at[L]
+        # primary LUT: every k-bit window -> (symbol+1)<<8 | code_len packed in
+        # one uint64 (single gather per decode step); canonical codes of
+        # length <= k tile a contiguous prefix, the rest escapes (entry 0)
+        lut = np.zeros(1 << k, np.uint64)
+        L_sorted = self.lengths[order].astype(np.int64)
+        if n:
+            short = L_sorted <= k  # prefix of the canonical order
+            widths = np.left_shift(1, k - L_sorted[short])
+            packed = ((order[short] + 1) << 8) | L_sorted[short]
+            lut[: int(widths.sum())] = np.repeat(packed, widths).astype(np.uint64)
+        # left-aligned canonical codewords (monotone): escape resolution is
+        # one searchsorted over them, whatever the code length
+        cw_left = self.codes[order] << (64 - L_sorted).astype(np.uint64)
+        tables = _Tables(max_len, k, first_code, first_idx, count_at, order,
+                         lut, cw_left, L_sorted)
+        self._tables = tables
+        return tables
+
+    def _multi_tables(self) -> _MultiTables:
+        cached = getattr(self, "_mtables", None)
+        if cached is not None:
+            return cached
+        tables = self._decode_tables()
+        n = len(self.alphabet)
+        B = 8 if n <= 256 else (16 if n <= 65536 else 32)
+        S = (64 - _id_shift0(B)) // B  # 6 / 3 / 1 ids per probe entry
+        mtables = _MultiTables(tables, _multi_lut(tables.lut, tables.k, B, S), B, S)
+        self._mtables = mtables
+        return mtables
+
+    # -- decode (seed reference: per-symbol bit walk) -------------------------
+    def decode_bitwalk(self, blob: bytes, n_symbols: int) -> np.ndarray:
+        """Seed per-symbol decode, kept as the correctness reference and as
+        the benchmark baseline for the vectorized path."""
+        if n_symbols == 0:
+            return self.alphabet[:0].copy()
+        (total,) = struct.unpack_from("<Q", blob, 0)
+        bits = np.unpackbits(np.frombuffer(blob, np.uint8, offset=8))[:total]
+        t = self._decode_tables()
+        sorted_syms = t.order
         out = np.empty(n_symbols, self.alphabet.dtype)
         pos = 0
         bits_list = bits.tolist()
-        fl_code = first_code.tolist()
-        fl_idx = first_idx.tolist()
-        cnt = count_at.tolist()
+        fl_code = t.first_code.tolist()
+        fl_idx = t.first_idx.tolist()
+        cnt = t.count_at.tolist()
         for i in range(n_symbols):
             code = 0
             L = 0
@@ -137,6 +443,69 @@ class HuffmanCodec:
                     out[i] = self.alphabet[sorted_syms[fl_idx[L] + code - fl_code[L]]]
                     break
         return out
+
+    decode = decode_bitwalk  # legacy API (hf/hz blobs, small streams)
+
+    # -- decode (chunked, vectorized, parallel) -------------------------------
+    def decode_chunked(
+        self,
+        stream: bytes,
+        n_symbols: int,
+        chunk_size: int,
+        chunk_bits: np.ndarray,
+        *,
+        total_bits: int | None = None,
+        workers: int | None = None,
+    ) -> np.ndarray:
+        """Decode a chunked stream: each chunk's bit offset comes from the
+        chunk table, so lanes decode independently and in parallel."""
+        if n_symbols == 0:
+            return self.alphabet[:0].copy()
+        if self.alphabet.size == 0:
+            raise ValueError("empty codec cannot decode a nonempty stream")
+        mtables = self._multi_tables()
+        if mtables.tables.max_len > 63:  # a 64-bit probe window can't hold the code
+            raise ValueError("chunked decode supports code lengths <= 63")
+        chunk_bits = np.asarray(chunk_bits, np.int64)
+        C = chunk_bits.size
+        if C != -(-n_symbols // chunk_size):
+            raise ValueError("chunk table size inconsistent with symbol count")
+        ends = np.cumsum(chunk_bits)
+        if total_bits is not None and int(ends[-1]) != total_bits:
+            raise ValueError("chunk table inconsistent with stream length")
+        offsets = ends - chunk_bits
+        counts = np.full(C, chunk_size, np.int64)
+        counts[-1] = n_symbols - chunk_size * (C - 1)
+        total = int(ends[-1])
+        if len(stream) < (total + 7) // 8:
+            raise ValueError("truncated Huffman stream")
+        # tail pad absorbs finished lanes overrunning the stream end (<= 63
+        # bits per step for at most chunk_size steps) without clamping
+        words, padded = _sliding_words(stream, tail_pad=8 * chunk_size + 16)
+        if workers is not None:
+            w = max(1, min(workers, C))
+        else:
+            # threads only pay off past GIL contention: need cores and lanes
+            cores = os.cpu_count() or 1
+            w = max(1, min(cores, 8, C // 256)) if cores > 2 else 1
+        # step-major probe log; threaded runs zero it so a worker stopping
+        # early leaves count=0 slots, single-lane runs fill every used row
+        out2d = (np.empty if w <= 1 else np.zeros)((chunk_size, C), np.uint64)
+        if w <= 1:
+            niter = _decode_lanes(words, padded, offsets, counts, out2d, mtables)
+        else:
+            bounds = np.linspace(0, C, w + 1).astype(int)
+            with ThreadPoolExecutor(w) as ex:
+                futs = [
+                    ex.submit(_decode_lanes, words, padded, offsets[a:b], counts[a:b],
+                              out2d[:, a:b], mtables)
+                    for a, b in zip(bounds[:-1], bounds[1:])
+                    if b > a
+                ]
+                niter = max(f.result() for f in futs)
+        used = np.ascontiguousarray(out2d[:niter].T)  # lane-major for expansion
+        return self.alphabet[_expand_entries(used, counts, n_symbols,
+                                             mtables.B, mtables.S)]
 
     # -- serialization --------------------------------------------------------
     def table_bytes(self) -> bytes:
@@ -162,8 +531,18 @@ class HuffmanCodec:
 # ---------------------------------------------------------------------------
 
 
-def encode_codes(codes: np.ndarray, backend: str = "huffman+zlib") -> bytes:
-    """Entropy-encode an int32 code tensor; returns a self-describing blob."""
+def encode_codes(
+    codes: np.ndarray,
+    backend: str = "huffman+zlib",
+    *,
+    chunk_size: int | None = None,
+    use_accel: bool | None = None,
+) -> bytes:
+    """Entropy-encode an int32 code tensor; returns a self-describing blob.
+
+    Huffman backends emit the chunked ``hc``/``hcz`` format (see
+    docs/ENTROPY_FORMAT.md); ``encode_codes_legacy`` still produces the seed
+    ``hf``/``hz`` blobs for compatibility testing."""
     flat = np.ascontiguousarray(codes, np.int32).ravel()
     if backend == "zlib":
         # int32 -> int16 when it fits (usual case): halves the zlib input
@@ -175,21 +554,68 @@ def encode_codes(codes: np.ndarray, backend: str = "huffman+zlib") -> bytes:
             tag = b"z4"
         return _MAGIC + tag + struct.pack("<Q", flat.size) + payload
     if backend in ("huffman", "huffman+zlib"):
-        codec = HuffmanCodec.fit(flat)
-        stream = codec.encode(flat)
-        if backend == "huffman+zlib":
-            stream = zlib.compress(stream, 6)
-            tag = b"hz"
+        codec = HuffmanCodec.fit(flat, use_accel=use_accel)
+        packed, ends, total = codec._encode_bits(flat)
+        cs = int(chunk_size) if chunk_size else DEFAULT_CHUNK
+        n = flat.size
+        n_chunks = -(-n // cs) if n else 0
+        if n_chunks:
+            bnd = np.minimum(np.arange(1, n_chunks + 1, dtype=np.int64) * cs, n) - 1
+            chunk_bits = np.diff(np.concatenate([[0], ends[bnd]]))
         else:
-            tag = b"hf"
+            chunk_bits = np.zeros(0, np.int64)
+        # chunk table + bit stream travel together so zlib sees both
+        payload = chunk_bits.astype(_chunk_bits_dtype(cs)).tobytes() + packed.tobytes()
+        if backend == "huffman+zlib":
+            payload = zlib.compress(payload, 6)
+            tag = b"hZ"
+        else:
+            tag = b"hc"
         table = codec.table_bytes()
         return (
-            _MAGIC + tag + struct.pack("<QI", flat.size, len(table)) + table + stream
+            _MAGIC
+            + tag
+            + struct.pack("<QIII", n, cs, n_chunks, len(table))
+            + table
+            + struct.pack("<Q", total)
+            + payload
         )
     raise ValueError(f"unknown entropy backend {backend!r}")
 
 
-def decode_codes(blob: bytes, shape: tuple[int, ...]) -> np.ndarray:
+def encode_codes_legacy(codes: np.ndarray, backend: str = "huffman+zlib") -> bytes:
+    """Seed (pre-chunking) encoder: emits ``hf``/``hz`` blobs.  Kept so tests
+    and benchmarks can exercise the backward-compat decode path."""
+    flat = np.ascontiguousarray(codes, np.int32).ravel()
+    if backend not in ("huffman", "huffman+zlib"):
+        raise ValueError(f"legacy encoder only supports huffman backends, got {backend!r}")
+    codec = HuffmanCodec.fit(flat, use_accel=False)
+    stream = codec.encode(flat)
+    if backend == "huffman+zlib":
+        stream = zlib.compress(stream, 6)
+        tag = b"hz"
+    else:
+        tag = b"hf"
+    table = codec.table_bytes()
+    return _MAGIC + tag + struct.pack("<QI", flat.size, len(table)) + table + stream
+
+
+_CODEC_CACHE: dict[bytes, HuffmanCodec] = {}
+
+
+def _cached_codec(table: bytes) -> HuffmanCodec:
+    """Decode-side codec cache: repeated decodes of the same artifact (the
+    steady-state serving pattern) skip canonical-table and LUT rebuilds."""
+    codec = _CODEC_CACHE.get(table)
+    if codec is None:
+        codec, _ = HuffmanCodec.from_table(table)
+        if len(_CODEC_CACHE) >= 16:
+            _CODEC_CACHE.pop(next(iter(_CODEC_CACHE)))
+        _CODEC_CACHE[table] = codec
+    return codec
+
+
+def decode_codes(blob: bytes, shape: tuple[int, ...], *, workers: int | None = None) -> np.ndarray:
     assert blob[:4] == _MAGIC, "bad entropy blob"
     tag = blob[4:6]
     if tag in (b"z2", b"z4"):
@@ -197,6 +623,21 @@ def decode_codes(blob: bytes, shape: tuple[int, ...]) -> np.ndarray:
         raw = zlib.decompress(blob[14:])
         dt = np.int16 if tag == b"z2" else np.int32
         return np.frombuffer(raw, dt).astype(np.int32).reshape(shape)
+    if tag in (b"hc", b"hZ"):
+        n, cs, n_chunks, tlen = struct.unpack_from("<QIII", blob, 6)
+        off = 6 + 20
+        codec = _cached_codec(blob[off : off + tlen])
+        off += tlen
+        (total,) = struct.unpack_from("<Q", blob, off)
+        off += 8
+        payload = blob[off:]
+        if tag == b"hZ":
+            payload = zlib.decompress(payload)
+        cb_dtype = _chunk_bits_dtype(cs)
+        chunk_bits = np.frombuffer(payload, cb_dtype, n_chunks)
+        stream = payload[np.dtype(cb_dtype).itemsize * n_chunks :]
+        out = codec.decode_chunked(stream, n, cs, chunk_bits, total_bits=total, workers=workers)
+        return out.astype(np.int32).reshape(shape)
     if tag in (b"hf", b"hz"):
         n, tlen = struct.unpack_from("<QI", blob, 6)
         off = 6 + 12
@@ -204,5 +645,5 @@ def decode_codes(blob: bytes, shape: tuple[int, ...]) -> np.ndarray:
         stream = blob[off + tlen :]
         if tag == b"hz":
             stream = zlib.decompress(stream)
-        return codec.decode(stream, n).astype(np.int32).reshape(shape)
+        return codec.decode_bitwalk(stream, n).astype(np.int32).reshape(shape)
     raise ValueError(f"unknown entropy tag {tag!r}")

@@ -40,10 +40,17 @@ class SZCompressed:
     outlier_idx: np.ndarray  # int64 flat indices into the padded volume
     outlier_val: np.ndarray  # float32 exact values
     extras: dict = field(default_factory=dict)  # e.g. attached GWLZ enhancers
+    # serialization cache: (extras fingerprint, blob); GWLZ.compress asks for
+    # nbytes before and after attaching enhancers, and size_report() again
+    _blob_cache: tuple | None = field(default=None, init=False, repr=False, compare=False)
 
     @property
     def nbytes(self) -> int:
         return len(self.to_bytes())
+
+    def _extras_key(self) -> tuple:
+        # exact: holds references to the immutable values, no copies or hashes
+        return tuple(sorted(self.extras.items()))
 
     def size_report(self) -> dict:
         extras = sum(len(v) for v in self.extras.values())
@@ -56,6 +63,14 @@ class SZCompressed:
         }
 
     def to_bytes(self) -> bytes:
+        key = self._extras_key()
+        if self._blob_cache is not None and self._blob_cache[0] == key:
+            return self._blob_cache[1]
+        blob = self._serialize()
+        self._blob_cache = (key, blob)
+        return blob
+
+    def _serialize(self) -> bytes:
         hdr = _HDR.pack(
             _MAGIC,
             len(self.shape),
@@ -131,7 +146,11 @@ class SZCompressed:
 
 
 class SZCompressor:
-    """Configurable error-bounded compressor (predictor x order x backend)."""
+    """Configurable error-bounded compressor (predictor x order x backend).
+
+    The default ``huffman+zlib`` backend emits the chunked, vectorized-decode
+    entropy format (docs/ENTROPY_FORMAT.md); artifacts produced by the seed
+    single-stream format still decompress."""
 
     def __init__(self, predictor: str = "interp", order: str = "cubic",
                  backend: str = "huffman+zlib", max_levels: int = 5):

@@ -1,0 +1,39 @@
+"""Benchmark harness smoke test: ``benchmarks/run.py --fast`` must execute
+end-to-end so the scripts can't silently rot (imports all benchmark modules;
+runs the throughput module at smoke settings)."""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def test_run_fast_smoke():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(ROOT, "src"), ROOT, env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--fast", "--only", "throughput"],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=840,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    lines = [l for l in proc.stdout.splitlines() if "," in l]
+    assert lines and lines[0].startswith("name,"), proc.stdout
+    assert not any(",0,ERROR" in l for l in lines), proc.stdout
+    names = {l.split(",")[0] for l in lines[1:]}
+    # the entropy-stage rows must be present (perf trajectory anchor)
+    assert any(n.startswith("throughput/entropy/hcz_decode") for n in names), names
+    assert any(n.startswith("throughput/entropy/decode_speedup") for n in names), names
+    assert any(n.startswith("throughput/compress/interp/huffman+zlib") for n in names), names
+
+
+def test_run_rejects_unknown_module():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(ROOT, "src"), ROOT, env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--fast", "--only", "nope"],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=300,
+    )
+    assert proc.returncode != 0

@@ -1,0 +1,165 @@
+"""Chunked entropy codec: round trips, chunk boundaries, legacy-format decode,
+accelerator-backed frequency counting (docs/ENTROPY_FORMAT.md)."""
+import numpy as np
+import pytest
+
+from repro.sz.entropy import (
+    DEFAULT_CHUNK,
+    HuffmanCodec,
+    decode_codes,
+    encode_codes,
+    encode_codes_legacy,
+    shannon_bits,
+)
+
+BACKENDS = ("zlib", "huffman", "huffman+zlib")
+
+
+def _cases():
+    rng = np.random.default_rng(7)
+    return {
+        "skewed": rng.choice([0] * 8 + [1, -1, 2, -2, 9], size=60000).astype(np.int32),
+        "uniform_wide": rng.integers(-600, 600, size=37777).astype(np.int32),
+        "single_symbol": np.full(1234, -3, np.int32),
+        "empty": np.zeros(0, np.int32),
+        "one_element": np.array([5], np.int32),
+        "big_magnitude": rng.integers(-(2**17), 2**17, size=4000).astype(np.int32),
+        "extreme_magnitude": np.array([2**30, -(2**30), 0, 0, 7], np.int32),
+    }
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("name", list(_cases()))
+def test_roundtrip_distributions(name, backend):
+    codes = _cases()[name]
+    blob = encode_codes(codes, backend)
+    np.testing.assert_array_equal(decode_codes(blob, codes.shape), codes)
+
+
+@pytest.mark.parametrize("n", [
+    0, 1, 7, DEFAULT_CHUNK - 1, DEFAULT_CHUNK, DEFAULT_CHUNK + 1,
+    4 * DEFAULT_CHUNK - 1, 4 * DEFAULT_CHUNK, 4 * DEFAULT_CHUNK + 1,
+])
+def test_chunk_boundaries(n):
+    rng = np.random.default_rng(n)
+    codes = rng.integers(-9, 9, size=n).astype(np.int32)
+    for cs in (8, 64, DEFAULT_CHUNK):
+        blob = encode_codes(codes, "huffman", chunk_size=cs)
+        np.testing.assert_array_equal(decode_codes(blob, codes.shape), codes)
+        blob = encode_codes(codes, "huffman+zlib", chunk_size=cs)
+        np.testing.assert_array_equal(decode_codes(blob, codes.shape), codes)
+
+
+def test_chunked_decode_worker_counts():
+    rng = np.random.default_rng(11)
+    codes = rng.choice([0, 0, 0, 1, -1, 4], size=10000).astype(np.int32)
+    blob = encode_codes(codes, "huffman+zlib", chunk_size=32)
+    for workers in (1, 2, 5):
+        np.testing.assert_array_equal(
+            decode_codes(blob, codes.shape, workers=workers), codes)
+
+
+@pytest.mark.parametrize("backend", ["huffman", "huffman+zlib"])
+def test_legacy_tags_still_decode(backend):
+    """Seed hf/hz blobs (pre-chunking format) must keep decoding bit-exactly."""
+    rng = np.random.default_rng(3)
+    for codes in (
+        rng.choice([0, 0, 0, 1, -2], size=5000).astype(np.int32),
+        np.full(10, 4, np.int32),
+        np.zeros(0, np.int32),
+    ):
+        blob = encode_codes_legacy(codes, backend)
+        assert blob[4:6] in (b"hf", b"hz")
+        np.testing.assert_array_equal(decode_codes(blob, codes.shape), codes)
+
+
+def test_new_tags_are_chunked():
+    codes = np.arange(1000, dtype=np.int32) % 17
+    assert encode_codes(codes, "huffman")[4:6] == b"hc"
+    assert encode_codes(codes, "huffman+zlib")[4:6] == b"hZ"
+
+
+def test_chunked_matches_bitwalk_reference():
+    """The vectorized LUT decode must agree with the seed per-symbol walk."""
+    rng = np.random.default_rng(5)
+    codes = rng.choice([0] * 20 + list(range(-40, 40)), size=20000).astype(np.int32)
+    codec = HuffmanCodec.fit(codes)
+    stream = codec.encode(codes)
+    want = codec.decode_bitwalk(stream, codes.size)
+    blob = encode_codes(codes, "huffman")
+    got = decode_codes(blob, codes.shape)
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(got, codes)
+
+
+def test_long_codes_take_escape_path():
+    """An alphabet skewed enough to exceed the 12-bit LUT still decodes (the
+    per-length escape table resolves the long codes)."""
+    sizes = [2 ** i for i in range(18, 0, -1)] + [1, 1]  # ~20 lengths, max > 12
+    codes = np.repeat(np.arange(len(sizes), dtype=np.int32), sizes)
+    rng = np.random.default_rng(0)
+    rng.shuffle(codes)
+    codec = HuffmanCodec.fit(codes)
+    assert int(codec.lengths.max()) > 12, "test needs codes longer than the LUT"
+    blob = encode_codes(codes, "huffman+zlib")
+    np.testing.assert_array_equal(decode_codes(blob, codes.shape), codes)
+
+
+def test_code_lengths_are_limited():
+    """Pathological (Fibonacci-like) skew must not exceed the 32-bit cap."""
+    from repro.sz.entropy import _limited_code_lengths
+
+    counts = np.asarray([1, 1] + [2 ** i for i in range(1, 45)], np.int64)
+    lengths = _limited_code_lengths(counts)
+    assert int(lengths.max()) <= 32
+    assert lengths.size == counts.size
+
+
+def test_fit_accel_parity():
+    """Accelerator-backed frequency counting gives the identical codec."""
+    rng = np.random.default_rng(13)
+    codes = rng.choice([0, 0, 0, 0, 1, -1, 2, -3, 8], size=30000).astype(np.int32)
+    a = HuffmanCodec.fit(codes, use_accel=True)
+    b = HuffmanCodec.fit(codes, use_accel=False)
+    np.testing.assert_array_equal(a.alphabet, b.alphabet)
+    np.testing.assert_array_equal(a.lengths, b.lengths)
+    np.testing.assert_array_equal(a.codes, b.codes)
+
+
+def test_huffman_near_shannon():
+    rng = np.random.default_rng(3)
+    codes = rng.choice([0, 0, 0, 0, 0, 1, -1, 2], size=50000).astype(np.int32)
+    codec = HuffmanCodec.fit(codes)
+    enc = codec.encode(codes)
+    ideal = shannon_bits(codes) / 8
+    assert len(enc) - 8 <= ideal * 1.25 + 64
+
+
+def test_chunk_table_overhead_is_small():
+    """Chunking must not meaningfully hurt compression (paper §4.3 claim)."""
+    rng = np.random.default_rng(2)
+    codes = np.round(rng.normal(0, 3, size=64**3)).astype(np.int32)
+    new = len(encode_codes(codes, "huffman+zlib"))
+    old = len(encode_codes_legacy(codes, "huffman+zlib"))
+    assert new <= old * 1.03, (new, old)
+
+
+def test_truncated_stream_raises():
+    codes = np.arange(100, dtype=np.int32) % 7
+    blob = encode_codes(codes, "huffman")
+    with pytest.raises(ValueError):
+        decode_codes(blob[:-4], codes.shape)
+
+
+def test_roundtrip_fuzz():
+    """Seeded sweep over alphabet sizes, skews, and stream lengths."""
+    rng = np.random.default_rng(99)
+    for _ in range(25):
+        n = int(rng.integers(1, 3000))
+        alpha = int(rng.integers(1, 200))
+        base = int(rng.integers(-(2**16), 2**16))
+        p = rng.dirichlet(np.full(alpha, float(rng.uniform(0.05, 2.0))))
+        codes = (base + rng.choice(alpha, size=n, p=p)).astype(np.int32)
+        for backend in BACKENDS:
+            blob = encode_codes(codes, backend)
+            np.testing.assert_array_equal(decode_codes(blob, codes.shape), codes)

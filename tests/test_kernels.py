@@ -94,6 +94,39 @@ def test_group_hist_matches_ref(n_groups, rows):
     assert int(h_a.sum()) == x.size
 
 
+@pytest.mark.parametrize("n_bins", [2, 37, 1000])
+@pytest.mark.parametrize("size", [128, 50000])
+def test_symbol_hist_matches_ref(n_bins, size):
+    rng = np.random.default_rng(n_bins + size)
+    vals = jnp.asarray(rng.integers(0, n_bins, size=size).astype(np.int32))
+    h_pal = ops.symbol_hist_op(vals, n_bins=n_bins, use_pallas=True, interpret=True)
+    h_ref = ops.symbol_hist_op(vals, n_bins=n_bins, use_pallas=False)
+    want = np.bincount(np.asarray(vals), minlength=n_bins)
+    np.testing.assert_array_equal(np.asarray(h_pal), want)
+    np.testing.assert_array_equal(np.asarray(h_ref), want)
+    assert int(h_pal.sum()) == size
+
+
+def test_symbol_hist_ignores_out_of_range():
+    vals = jnp.asarray(np.array([-3, 0, 1, 1, 2, 99], np.int32))
+    h = ops.symbol_hist_op(vals, n_bins=3, use_pallas=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(h), [1, 2, 1])
+
+
+def test_symbol_hist_feeds_huffman_fit():
+    """The entropy stage's accelerated frequency count must match np.unique."""
+    from repro.sz.entropy import HuffmanCodec
+
+    rng = np.random.default_rng(4)
+    codes = rng.choice([0, 0, 0, 1, -1, 2, -7], size=20000).astype(np.int32)
+    codec = HuffmanCodec.fit(codes, use_accel=True)
+    alphabet, counts = np.unique(codes, return_counts=True)
+    np.testing.assert_array_equal(codec.alphabet, alphabet)
+    # code lengths must come from the same counts either way
+    ref_codec = HuffmanCodec.fit(codes, use_accel=False)
+    np.testing.assert_array_equal(codec.lengths, ref_codec.lengths)
+
+
 def test_group_hist_matches_grouping_module():
     """Kernel ids must agree with repro.core.grouping (the pipeline contract)."""
     from repro.core import grouping

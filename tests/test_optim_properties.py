@@ -1,0 +1,24 @@
+"""Hypothesis property tests for the optimizer stack (split from
+test_optim.py so that module still runs when hypothesis isn't installed)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.optim.grad_compress import GradCompressConfig, quantize_leaf
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**30), st.sampled_from(["int8", "int16"]))
+def test_ef_residual_bounded_property(seed, dtype):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=64).astype(np.float32))
+    cfg = GradCompressConfig(rel_eb=0.1, code_dtype=dtype)
+    codes, scale, new_err = quantize_leaf(g, jnp.zeros(64), cfg)
+    bound = 127 if dtype == "int8" else 32767
+    assert int(jnp.max(jnp.abs(codes.astype(jnp.int32)))) <= bound
+    # EF residual == true quantization error
+    ghat = codes.astype(jnp.float32) * scale
+    np.testing.assert_allclose(np.asarray(new_err), np.asarray(g - ghat), atol=1e-6)

@@ -2,7 +2,6 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.sz import compress, decompress
 from repro.sz.entropy import HuffmanCodec, decode_codes, encode_codes, shannon_bits
@@ -102,22 +101,5 @@ def test_huffman_beats_shannon_bound_loosely():
     assert len(enc) - 8 <= ideal * 1.25 + 64  # canonical Huffman within 25% of entropy
 
 
-@settings(max_examples=25, deadline=None)
-@given(st.lists(st.integers(min_value=-1000, max_value=1000), min_size=1, max_size=400))
-def test_huffman_roundtrip_property(vals):
-    codes = np.asarray(vals, np.int32)
-    codec = HuffmanCodec.fit(codes)
-    out = codec.decode(codec.encode(codes), codes.size)
-    np.testing.assert_array_equal(codes, out)
-
-
-@settings(max_examples=20, deadline=None)
-@given(
-    st.integers(min_value=0, max_value=2**31),
-    st.sampled_from([1e-2, 1e-3, 1e-4]),
-)
-def test_sz_bound_property(seed, reb):
-    rng = np.random.default_rng(seed)
-    x = jnp.asarray((np.cumsum(rng.normal(size=(12, 12, 12)), axis=0) * 10).astype(np.float32))
-    art, recon = compress(x, rel_eb=reb, backend="zlib")
-    assert float(jnp.max(jnp.abs(recon - x))) <= art.eb_abs * (1 + 1e-5)
+# hypothesis-based property tests live in test_sz_properties.py so this
+# module keeps running when hypothesis isn't installed

@@ -1,0 +1,32 @@
+"""Hypothesis property tests for the SZ substrate (split from test_sz.py so
+that module still runs when hypothesis isn't installed)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.sz import compress
+from repro.sz.entropy import HuffmanCodec
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(min_value=-1000, max_value=1000), min_size=1, max_size=400))
+def test_huffman_roundtrip_property(vals):
+    codes = np.asarray(vals, np.int32)
+    codec = HuffmanCodec.fit(codes)
+    out = codec.decode(codec.encode(codes), codes.size)
+    np.testing.assert_array_equal(codes, out)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=2**31),
+    st.sampled_from([1e-2, 1e-3, 1e-4]),
+)
+def test_sz_bound_property(seed, reb):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((np.cumsum(rng.normal(size=(12, 12, 12)), axis=0) * 10).astype(np.float32))
+    art, recon = compress(x, rel_eb=reb, backend="zlib")
+    assert float(jnp.max(jnp.abs(recon - x))) <= art.eb_abs * (1 + 1e-5)
