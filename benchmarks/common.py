@@ -39,6 +39,11 @@ else:
 # entropy-stage isolation benchmark volume (the acceptance target is 64^3)
 ENTROPY_VOLUME = (32, 32, 32) if SMOKE else (64, 64, 64)
 
+# tiled-engine benchmark: full size matches the ISSUE 2 acceptance setting
+# (single tile of a 128^3 volume; region decode >= 4x over full decode)
+TILED_VOLUME = (32, 32, 32) if SMOKE else (128, 128, 128)
+TILED_TILE = (16, 16, 16) if SMOKE else (64, 64, 64)
+
 
 def timed(fn, *args, repeats=3, **kw):
     fn(*args, **kw)  # warmup/compile

@@ -10,7 +10,14 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import ENTROPY_VOLUME, VOLUME, emit, timed
+from benchmarks.common import (
+    ENTROPY_VOLUME,
+    TILED_TILE,
+    TILED_VOLUME,
+    VOLUME,
+    emit,
+    timed,
+)
 from repro.core import enhancer as E
 from repro.data import nyx_like_field
 from repro.kernels import ops
@@ -40,6 +47,35 @@ def _entropy_stage_bench() -> None:
          f"speedup_vs_seed={us_old/us_new:.1f}x;overhead={(len(blob_new)/len(blob_old)-1)*100:.2f}%")
 
 
+def _tiled_bench() -> None:
+    """Tiled engine: compress, full decode, and single-tile region decode.
+
+    The region row reports the speedup over full decode — random-access
+    reads must only pay for intersecting entropy lanes (target >= 4x at the
+    full-size 128^3/64^3 setting, where 1 of 8 lanes intersects)."""
+    from repro.sz import tiled
+
+    x = jnp.asarray(nyx_like_field(TILED_VOLUME, "temperature", seed=7))
+    nbytes = x.size * 4
+    comp = SZCompressor()
+    (art, _recon), us = timed(lambda: comp.compress_tiled(x, TILED_TILE, rel_eb=1e-3),
+                              repeats=1)
+    emit("throughput/tiled/compress", us,
+         f"MBps={nbytes/us:.1f};cr={nbytes/art.nbytes:.1f};tiles={art.n_tiles}")
+
+    full, us_full = timed(lambda: tiled.decompress_tiled(art), repeats=3)
+    emit("throughput/tiled/decompress_full", us_full, f"MBps={nbytes/us_full:.1f}")
+
+    roi = tuple(slice(0, t) for t in art.tile)  # exactly one tile
+    reg, us_reg = timed(lambda: tiled.decompress_region(art, roi), repeats=3)
+    assert np.array_equal(np.asarray(reg), np.asarray(full)[roi]), \
+        "region decode must equal the full decode's crop"
+    lanes = tiled.DECODE_STATS["tiles_decoded"]
+    emit("throughput/tiled/region_decode", us_reg,
+         f"MBps={reg.size*4/us_reg:.1f};speedup_vs_full={us_full/us_reg:.1f}x;"
+         f"lanes={lanes}/{art.n_tiles}")
+
+
 def main() -> None:
     x = jnp.asarray(nyx_like_field(VOLUME, "temperature", seed=1))
     nbytes = x.size * 4
@@ -59,6 +95,7 @@ def main() -> None:
             emit(f"throughput/entropy_decode/{pred}/{backend}", us, f"MBps={codes_mb/us:.1f}")
 
     _entropy_stage_bench()
+    _tiled_bench()
 
     # kernels (interpret mode on CPU: correctness-path timing only)
     _, us = timed(lambda: ops.lorenzo_quant_op(x, 1.0, use_pallas=False).block_until_ready(), repeats=3)

@@ -16,6 +16,7 @@ from repro.core.trainer import (
     GWLZTrainConfig,
     enhance,
     train_enhancers,
+    train_enhancers_tiled,
 )
 from repro.sz.szjax import SZCompressed, SZCompressor
 
@@ -150,6 +151,82 @@ class GWLZ:
         model = deserialize_model(blob)
         clamp = artifact.eb_abs if self.clamp_to_bound else None
         return enhance(recon, model, clamp_eb=clamp)
+
+    # -- tiled path (GWTC container, random-access decode) --------------------
+
+    def _tile_enhancer(self, artifact):
+        """Per-tile enhancement transform for decoded tile batches, or None.
+
+        Deliberately a per-tile loop, not one batched call: region and full
+        decode see different tile counts, so folding tiles into a shared
+        slice batch (or vmapping the tile axis) would compile different
+        batched programs whose ulps disagree — enhancing each tile at
+        identical shapes is what upholds the bit-identity contract
+        ``repro.sz.tiled`` requires of any ``tile_transform``."""
+        blob = artifact.extras.get("gwlz")
+        if blob is None:
+            return None
+        model = deserialize_model(blob)
+        clamp = artifact.eb_abs if self.clamp_to_bound else None
+
+        def transform(tiles: jax.Array) -> jax.Array:
+            return jnp.stack([enhance(t, model, clamp_eb=clamp) for t in tiles])
+
+        return transform
+
+    def compress_tiled(
+        self, x: jax.Array, tile=(64, 64, 64), *,
+        rel_eb: float | None = None, abs_eb: float | None = None, callback=None,
+    ) -> tuple["object", GWLZStats]:
+        """Tile-grid GWLZ: tiled SZ compress, then ONE batched enhancer
+        training pass over the per-tile slice stack; the model rides in the
+        GWTC container's extras.  Returns (TiledCompressed, stats)."""
+        from repro.sz import tiled
+
+        x = jnp.asarray(x, jnp.float32)
+        if x.ndim != 3:
+            raise ValueError("tiled GWLZ needs a 3D volume (enhancers are 2D CNNs)")
+        artifact, recon = self.sz.compress_tiled(x, tile, rel_eb=rel_eb, abs_eb=abs_eb)
+        sz_bytes = artifact.nbytes
+        residual = x - recon
+
+        recon_tiles = tiled.split_tiles(tiled.pad_to_tiles(recon, artifact.tile), artifact.tile)
+        resid_tiles = tiled.split_tiles(tiled.pad_to_tiles(residual, artifact.tile), artifact.tile)
+        model, history = train_enhancers_tiled(
+            recon_tiles, resid_tiles, self.train_cfg, callback=callback)
+        artifact.extras["gwlz"] = serialize_model(model)
+
+        enhanced_tiles = self._tile_enhancer(artifact)(recon_tiles)
+        enhanced = tiled.stitch_tiles(enhanced_tiles, artifact.grid)[
+            tuple(slice(0, d) for d in x.shape)]
+        total_bytes = artifact.nbytes
+        stats = GWLZStats(
+            psnr_sz=float(metrics.psnr(x, recon)),
+            psnr_gwlz=float(metrics.psnr(x, enhanced)),
+            cr_sz=float(x.nbytes / sz_bytes),
+            cr_gwlz=float(x.nbytes / total_bytes),
+            overhead=float((total_bytes - sz_bytes) / sz_bytes),
+            max_err_sz=float(metrics.max_abs_err(x, recon)),
+            max_err_gwlz=float(metrics.max_abs_err(x, enhanced)),
+            eb_abs=artifact.eb_abs,
+            n_model_params=model.n_params,
+            loss_history=history["loss"],
+        )
+        return artifact, stats
+
+    def decompress_tiled(self, artifact, *, workers: int | None = None) -> jax.Array:
+        from repro.sz import tiled
+
+        return tiled.decompress_tiled(
+            artifact, workers=workers, tile_transform=self._tile_enhancer(artifact))
+
+    def decompress_region(self, artifact, roi, *, workers: int | None = None) -> jax.Array:
+        """ROI decode touching only intersecting tiles; enhancement (when a
+        model is attached) runs on exactly those tiles."""
+        from repro.sz import tiled
+
+        return tiled.decompress_region(
+            artifact, roi, workers=workers, tile_transform=self._tile_enhancer(artifact))
 
 
 def quick_compress(x, rel_eb=1e-3, n_groups=20, epochs=60, **kw):

@@ -12,7 +12,7 @@ Fig. 5 (predict the original data directly instead of the residual).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from functools import partial
 
 import jax
@@ -188,6 +188,37 @@ def train_enhancers(
         history["gate"] = np.asarray(gate)
     model = GWLZModel(params=params, bn_state=bn_state, edges=edges, rscale=rscale, cfg=cfg)
     return model, history
+
+
+def tiles_as_slices(tiles: jax.Array) -> jax.Array:
+    """[Nt, T0, ...] tile batch -> one slice stack along every tile's axis 0.
+
+    Folds the tile-batch axis into the slice axis, so a whole tile grid
+    trains as a single slice batch."""
+    return tiles.reshape((-1,) + tuple(tiles.shape[2:]))
+
+
+def train_enhancers_tiled(
+    recon_tiles: jax.Array,
+    residual_tiles: jax.Array,
+    cfg: GWLZTrainConfig = GWLZTrainConfig(),
+    *,
+    callback=None,
+) -> tuple[GWLZModel, dict]:
+    """Group-wise training routed through the tile grid.
+
+    Every tile contributes its axis-0 slices to ONE batched
+    :func:`train_enhancers` call — per-tile group masks are computed inside
+    the shared step over the stacked slices, so the tile grid trains exactly
+    like a (taller) volume.  Requires 3D tiles ([Nt, T0, T1, T2]); the
+    enhancers are 2D CNNs over each tile's (T1, T2) slices."""
+    if recon_tiles.ndim != 4 or residual_tiles.shape != recon_tiles.shape:
+        raise ValueError(f"expected matching [Nt, T, T, T] tile stacks, got "
+                         f"{recon_tiles.shape} / {residual_tiles.shape}")
+    cfg = replace(cfg, slice_axis=0)  # tile slices are already stacked on axis 0
+    return train_enhancers(
+        tiles_as_slices(recon_tiles), tiles_as_slices(residual_tiles), cfg,
+        callback=callback)
 
 
 @partial(jax.jit, static_argnames=("n_groups",))

@@ -23,16 +23,15 @@ def _shift_zero(a: jax.Array, axis: int) -> jax.Array:
     return jnp.where(pos == 0, jnp.zeros_like(a), rolled)
 
 
-def _kernel(x_ref, codes_ref, carry_ref, *, two_eb: float):
-    i = pl.program_id(0)
-    x = x_ref[...]
-    # divide (not multiply-by-reciprocal): must round identically to the
-    # production quantizer at .5 ties
-    q = jnp.rint(x / two_eb)  # f32 grid values (exact for |q| < 2^24)
+def _lorenzo_slab(x: jax.Array, prev: jax.Array, two_eb: float):
+    """Shared slab body: prequantize + 3-axis stencil on one [BZ, Y, X] slab.
 
-    prev = jnp.where(i == 0, jnp.zeros_like(carry_ref[...]), carry_ref[...])  # [1, Y, X]
-    carry_ref[...] = q[-1:, :, :]
-
+    ``prev`` is the previous slab's last q-plane ([1, Y, X]; zeros at a
+    domain start).  Returns (codes, carry).  Divide (not multiply-by-
+    reciprocal): must round identically to the production quantizer at .5
+    ties; q stays in f32 (exact for |q| < 2^24)."""
+    q = jnp.rint(x / two_eb)
+    carry = q[-1:, :, :]
     # z-difference with cross-slab carry
     qz_shift = jnp.roll(q, 1, axis=0)
     pos_z = jax.lax.broadcasted_iota(jnp.int32, q.shape, 0)
@@ -41,7 +40,15 @@ def _kernel(x_ref, codes_ref, carry_ref, *, two_eb: float):
     # y and x differences (full-extent axes -> zero boundary is the real one)
     d = d - _shift_zero(d, 1)
     d = d - _shift_zero(d, 2)
-    codes_ref[...] = d.astype(jnp.int32)
+    return d.astype(jnp.int32), carry
+
+
+def _kernel(x_ref, codes_ref, carry_ref, *, two_eb: float):
+    i = pl.program_id(0)
+    prev = jnp.where(i == 0, jnp.zeros_like(carry_ref[...]), carry_ref[...])  # [1, Y, X]
+    codes, carry = _lorenzo_slab(x_ref[...], prev, two_eb)
+    carry_ref[...] = carry
+    codes_ref[...] = codes
 
 
 @partial(jax.jit, static_argnames=("eb", "block_z", "interpret"))
@@ -60,6 +67,42 @@ def lorenzo_quant(x: jax.Array, eb: float, *, block_z: int = 8, interpret: bool 
         in_specs=[pl.BlockSpec((bz, Y, X), lambda i: (i, 0, 0))],
         out_specs=pl.BlockSpec((bz, Y, X), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((Z, Y, X), jnp.int32),
+        scratch_shapes=[_vmem((1, Y, X), jnp.float32)],
+        interpret=interpret,
+    )(x)
+
+
+def _tiles_kernel(x_ref, codes_ref, carry_ref, *, two_eb: float):
+    """Tile-batched variant: grid is (tile, z-slab); the z-carry resets at the
+    first slab of every tile, so each tile sees its own zero boundary (the
+    tiled container's prediction domain ends at the tile edge)."""
+    i = pl.program_id(1)
+    prev = jnp.where(i == 0, jnp.zeros_like(carry_ref[...]), carry_ref[...])  # [1, Y, X]
+    codes, carry = _lorenzo_slab(x_ref[0], prev, two_eb)
+    carry_ref[...] = carry
+    codes_ref[0] = codes
+
+
+@partial(jax.jit, static_argnames=("eb", "block_z", "interpret"))
+def lorenzo_quant_tiles(x: jax.Array, eb: float, *, block_z: int = 8,
+                        interpret: bool = True) -> jax.Array:
+    """x: [B, Z, Y, X] float32 tile batch -> int32 per-tile Lorenzo codes.
+
+    Same fused prequant+stencil as :func:`lorenzo_quant`, with a leading
+    tile-batch grid dimension.  TPU grid steps are sequential in row-major
+    order, so slabs of tile b run back-to-back and the VMEM carry is exact
+    within a tile; the carry reset at slab 0 makes tiles independent (codes
+    match per-tile :func:`lorenzo_quant` exactly).  Tile z-extents are user
+    chosen, so the slab height snaps to the largest divisor of Z <= block_z
+    instead of asserting divisibility."""
+    B, Z, Y, X = x.shape
+    bz = next(b for b in range(min(block_z, Z), 0, -1) if Z % b == 0)
+    return pl.pallas_call(
+        partial(_tiles_kernel, two_eb=float(2.0 * eb)),
+        grid=(B, Z // bz),
+        in_specs=[pl.BlockSpec((1, bz, Y, X), lambda b, i: (b, i, 0, 0))],
+        out_specs=pl.BlockSpec((1, bz, Y, X), lambda b, i: (b, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Z, Y, X), jnp.int32),
         scratch_shapes=[_vmem((1, Y, X), jnp.float32)],
         interpret=interpret,
     )(x)

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.enhancer_fused import enhancer_fused
 from repro.kernels.group_hist import group_hist, symbol_hist
-from repro.kernels.lorenzo_quant import lorenzo_quant
+from repro.kernels.lorenzo_quant import lorenzo_quant, lorenzo_quant_tiles
 
 
 def _on_tpu() -> bool:
@@ -24,6 +24,19 @@ def lorenzo_quant_op(x, eb, *, use_pallas: bool | None = None, interpret: bool |
     if use:
         return lorenzo_quant(x, eb, interpret=not _on_tpu() if interpret is None else interpret)
     return ref.lorenzo_quant_ref(x, eb)
+
+
+def lorenzo_quant_tiles_op(x, eb, *, use_pallas: bool | None = None,
+                           interpret: bool | None = None):
+    """Tile-batched Lorenzo codes: x is [B, *tile] with axis 0 the tile batch.
+
+    The Pallas kernel covers the 3D-tile case ([B, Z, Y, X]); other tile
+    ranks run the jnp reference (the transform is identical per axis)."""
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use and x.ndim == 4:
+        return lorenzo_quant_tiles(
+            x, eb, interpret=not _on_tpu() if interpret is None else interpret)
+    return ref.lorenzo_quant_tiles_ref(x, eb)
 
 
 def enhancer_fused_op(x, params, bn_state, *, use_pallas: bool | None = None,

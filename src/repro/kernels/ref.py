@@ -17,6 +17,13 @@ def lorenzo_quant_ref(x: jax.Array, eb: float) -> jax.Array:
     return q
 
 
+def lorenzo_quant_tiles_ref(x: jax.Array, eb: float) -> jax.Array:
+    """Tile-batched Lorenzo codes: axis 0 is the tile batch, each tile gets
+    the per-volume stencil with its own zero boundary (independent domains).
+    vmap of the single-volume oracle, so the stencil exists in one place."""
+    return jax.vmap(lambda t: lorenzo_quant_ref(t, eb))(x)
+
+
 def enhancer_fused_ref(x: jax.Array, w1, b1, gamma, beta, mean, var, w2, b2) -> jax.Array:
     """Conv3x3(1->C) + BN(inference) + ReLU + Conv3x3(C->1), zero-pad SAME.
 

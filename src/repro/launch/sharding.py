@@ -142,6 +142,42 @@ def batch_pspec(mesh, *, seq_axis=None) -> P:
     return P(batch_axes_of(mesh), seq_axis)
 
 
+def tile_mesh(devices=None):
+    """1D mesh over all local devices for tile-grid fan-out (axis ``tiles``).
+
+    The tiled compression engine (repro.sz.tiled) treats the tile batch as a
+    pure data axis: every tile is an independent prediction+quantization
+    domain, so compress/decompress shard with no collectives at all."""
+    import numpy as np
+
+    devs = np.asarray(jax.devices() if devices is None else devices)
+    return jax.sharding.Mesh(devs, ("tiles",))
+
+
+def map_tiles(fn, tiles, *extra, mesh=None):
+    """Fan a tile-batched op across the device mesh via ``shard_map``.
+
+    ``fn(tiles, *extra)`` must map axis 0 elementwise (tile-independent) and
+    preserve the batch axis; ``extra`` operands are replicated.  The batch is
+    padded to a device multiple with repeats of tile 0 (cheap, discarded).
+    On a single device this is a plain call — no dispatch overhead."""
+    mesh = tile_mesh() if mesh is None else mesh
+    n = int(mesh.devices.size)
+    if n <= 1:
+        return fn(tiles, *extra)
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+
+    B = tiles.shape[0]
+    pad = (-B) % n
+    if pad:
+        tiles = jnp.concatenate([tiles, jnp.repeat(tiles[:1], pad, axis=0)])
+    in_specs = (P("tiles"),) + (P(),) * len(extra)
+    out = shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=P("tiles"),
+                    check_rep=False)(tiles, *extra)
+    return out[:B] if pad else out
+
+
 def cache_pspecs(cache, mesh, opts: ShardingOptions) -> object:
     """KV/SSM cache sharding: batch over data axes; the sequence axis of
     "global" caches over ``opts.seq_axis`` (flash-decode style); kv tensors'

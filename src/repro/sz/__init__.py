@@ -17,6 +17,12 @@ from repro.sz.predictor import (
     interp_decode,
 )
 from repro.sz.szjax import SZCompressor, SZCompressed, compress, decompress
+from repro.sz.tiled import (
+    TiledCompressed,
+    compress_tiled,
+    decompress_tiled,
+    decompress_region,
+)
 
 __all__ = [
     "prequantize",
@@ -31,4 +37,8 @@ __all__ = [
     "SZCompressed",
     "compress",
     "decompress",
+    "TiledCompressed",
+    "compress_tiled",
+    "decompress_tiled",
+    "decompress_region",
 ]

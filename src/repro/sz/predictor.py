@@ -190,11 +190,34 @@ def interp_encode(x: jax.Array, eb, order: str = "cubic", max_levels: int = 5):
     Returns ``(codes, omask, ovals, recon, meta)`` where arrays live on the
     padded grid and ``meta = (orig_shape, padded_shape, levels)``.  ``recon``
     cropped to ``orig_shape`` satisfies the error bound.
+
+    ``recon`` is the *decode program's* output, not the encoder's internal
+    reconstruction: the two are separately jitted, so fusion differences can
+    drift a few ulps apart — enough to push points sitting exactly at the
+    bound past it at decompression.  Running the decoder here and promoting
+    any straggler to an outlier makes the bound hold by construction on the
+    artifact the decompressor actually sees.
     """
     levels = _num_levels(x.shape, max_levels)
     pshape = _padded_shape(x.shape, levels)
     xp = _pad_edge(x, pshape)
     codes, omask, ovals, recon = _interp_encode_padded(xp, eb, levels, order)
+    # The coarse grid bypasses the outlier mechanism (Lorenzo-coded; decode
+    # never consults omask there), so only interp targets are promotable.
+    S = 1 << levels
+    coarse = jnp.zeros(pshape, bool).at[tuple(slice(0, None, S) for _ in pshape)].set(True)
+    # Invariants on exit: recon == decode(codes, omask, ovals) AND the bound
+    # holds on every promotable point.  The loop terminates: each iteration
+    # strictly grows omask (promoted points decode exactly thereafter), which
+    # is bounded by the volume size; in practice it runs 1-2 rounds.
+    recon = _interp_decode_padded(codes, omask, ovals, eb, levels, order)
+    while True:
+        bad = (jnp.abs(recon - xp) > eb) & ~omask & ~coarse
+        if not bool(bad.any()):
+            break
+        omask = omask | bad
+        ovals = jnp.where(bad, xp, ovals)
+        recon = _interp_decode_padded(codes, omask, ovals, eb, levels, order)
     meta = (tuple(x.shape), pshape, levels)
     return codes, omask, ovals, recon, meta
 

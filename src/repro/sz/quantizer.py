@@ -17,10 +17,30 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 # SZ-style quantization radius: codes live in (-R, R); |code| >= R means
 # "unpredictable" -> store exact value.  2^15 keeps the Huffman alphabet sane.
 OUTLIER_RADIUS = 1 << 15
+
+
+def resolve_eb(x: jax.Array, rel_eb: float | None, abs_eb: float | None) -> float:
+    """Resolve the absolute error bound from exactly one of rel_eb / abs_eb.
+
+    Relative bounds scale by the value range; the guard rejects bounds so
+    tight the prequantized grid index overflows f32-exact integers (shared
+    by every compressor front end — untiled and tiled resolve identically)."""
+    if (rel_eb is None) == (abs_eb is None):
+        raise ValueError("pass exactly one of rel_eb / abs_eb")
+    if rel_eb is not None:
+        vrange = float(jnp.max(x) - jnp.min(x))
+        abs_eb = rel_eb * max(vrange, np.finfo(np.float32).tiny)
+    abs_eb = float(abs_eb)
+    max_q = float(jnp.max(jnp.abs(x))) / (2.0 * abs_eb)
+    if max_q >= 2**30:
+        raise ValueError(
+            f"eb={abs_eb:g} too small for data magnitude (q={max_q:.3g} >= 2^30)")
+    return abs_eb
 
 
 def prequantize(x: jax.Array, eb: float | jax.Array) -> jax.Array:

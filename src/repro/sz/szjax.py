@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.sz import predictor as P
 from repro.sz.entropy import decode_codes, encode_codes
+from repro.sz.quantizer import resolve_eb
 
 _HDR = struct.Struct("<4sBBBBQ")  # magic, ndim, predictor, order, levels, eb bits as u64
 _MAGIC = b"SZJX"
@@ -165,17 +166,7 @@ class SZCompressor:
     ) -> tuple[SZCompressed, jax.Array]:
         """Returns (artifact, reconstruction). Exactly one of rel_eb/abs_eb."""
         x = jnp.asarray(x, jnp.float32)
-        if (rel_eb is None) == (abs_eb is None):
-            raise ValueError("pass exactly one of rel_eb / abs_eb")
-        if rel_eb is not None:
-            vrange = float(jnp.max(x) - jnp.min(x))
-            abs_eb = rel_eb * max(vrange, np.finfo(np.float32).tiny)
-        abs_eb = float(abs_eb)
-        max_q = float(jnp.max(jnp.abs(x))) / (2.0 * abs_eb)
-        if max_q >= 2**30:
-            raise ValueError(
-                f"eb={abs_eb:g} too small for data magnitude (q={max_q:.3g} >= 2^30)"
-            )
+        abs_eb = resolve_eb(x, rel_eb, abs_eb)
 
         if self.predictor == "lorenzo":
             codes = P.lorenzo_encode(x, abs_eb)
@@ -213,6 +204,38 @@ class SZCompressor:
         )
         recon = recon[tuple(slice(0, d) for d in orig_shape)]
         return artifact, recon
+
+    def compress_tiled(
+        self, x: jax.Array, tile=(64, 64, 64), *,
+        rel_eb: float | None = None, abs_eb: float | None = None,
+        use_pallas: bool | None = None, workers: int | None = None,
+    ):
+        """Tile-grid compress (independent entropy lanes, ``GWTC`` container
+        — docs/TILED_FORMAT.md).  Returns (TiledCompressed, reconstruction);
+        the artifact supports :meth:`decompress_region` without a full-volume
+        entropy decode.
+
+        The tile transform is ALWAYS prequant+Lorenzo — tiles must be exact,
+        independent domains, which the interpolation predictor's cross-level
+        coupling cannot provide.  ``self.predictor`` therefore applies only
+        to the monolithic :meth:`compress`; ``self.backend`` is honored."""
+        from repro.sz import tiled
+
+        return tiled.compress_tiled(
+            x, tile, rel_eb=rel_eb, abs_eb=abs_eb, backend=self.backend,
+            use_pallas=use_pallas, workers=workers)
+
+    def decompress_tiled(self, artifact, *, workers: int | None = None) -> jax.Array:
+        from repro.sz import tiled
+
+        return tiled.decompress_tiled(artifact, workers=workers)
+
+    def decompress_region(self, artifact, roi, *, workers: int | None = None) -> jax.Array:
+        """Decode only the tiles intersecting ``roi`` (slices or (lo, hi)
+        pairs); equals ``decompress_tiled(artifact)[roi]`` bit-for-bit."""
+        from repro.sz import tiled
+
+        return tiled.decompress_region(artifact, roi, workers=workers)
 
     def decompress(self, artifact: SZCompressed) -> jax.Array:
         if artifact.predictor == "lorenzo":

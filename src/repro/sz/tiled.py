@@ -1,0 +1,350 @@
+"""Tile-based compression engine with random-access decode (``GWTC``).
+
+The monolithic SZ path materializes one volume end to end; this engine splits
+the (padded) volume into a fixed tile grid and makes every tile a fully
+independent compression domain:
+
+* prequant + integer Lorenzo runs as one batched pass over the tile batch
+  (``kernels.ops.lorenzo_quant_tiles_op``; the tile axis fans across the
+  device mesh via ``repro.launch.sharding.map_tiles``),
+* each tile entropy-encodes as an independent lane on the chunked ``hc``/
+  ``hZ`` codec (docs/ENTROPY_FORMAT.md), so lanes decode independently and
+  in parallel,
+* the ``GWTC`` container stores a per-tile offset index, so
+  :func:`decompress_region` entropy-decodes *only* the tiles intersecting
+  the requested ROI — partial reads never pay for the whole blob.
+
+Because the Lorenzo transform is lossless, the tiled reconstruction is
+bit-identical to the untiled ``predictor="lorenzo"`` reconstruction
+(``dequantize(prequantize(x))``); only the codes differ, and only on tile
+boundary planes where the prediction carry is cut.  Container layout is
+specified in docs/TILED_FORMAT.md.
+"""
+from __future__ import annotations
+
+import os
+import struct
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.sz import entropy
+from repro.sz.predictor import lorenzo_decode
+from repro.sz.quantizer import resolve_eb
+
+_MAGIC = b"GWTC"
+_VERSION = 1
+_HDR = struct.Struct("<4sBBBBQQ")  # magic, version, ndim, backend, pad, eb bits, n_tiles
+_BACKENDS = {"zlib": 0, "huffman": 1, "huffman+zlib": 2}
+_BACKENDS_INV = {v: k for k, v in _BACKENDS.items()}
+
+# Observability for tests/benchmarks: how many lanes the last decode touched.
+DECODE_STATS = {"tiles_decoded": 0, "tiles_total": 0}
+
+
+# ---------------------------------------------------------------------------
+# tile grid geometry
+# ---------------------------------------------------------------------------
+
+
+def normalize_tile(tile, ndim: int) -> tuple[int, ...]:
+    if isinstance(tile, int):
+        tile = (tile,) * ndim
+    tile = tuple(int(t) for t in tile)
+    if len(tile) != ndim or any(t < 1 for t in tile):
+        raise ValueError(f"tile {tile} invalid for a {ndim}-d volume")
+    return tile
+
+
+def tile_grid(shape: tuple[int, ...], tile: tuple[int, ...]) -> tuple[int, ...]:
+    return tuple(-(-d // t) for d, t in zip(shape, tile))
+
+
+def pad_to_tiles(x: jax.Array, tile: tuple[int, ...]) -> jax.Array:
+    pshape = tuple(g * t for g, t in zip(tile_grid(x.shape, tile), tile))
+    pads = [(0, p - d) for d, p in zip(x.shape, pshape)]
+    return jnp.pad(x, pads, mode="edge")
+
+
+def split_tiles(xp: jax.Array, tile: tuple[int, ...]) -> jax.Array:
+    """[g0*t0, g1*t1, ...] -> [prod(g), t0, t1, ...] in row-major grid order."""
+    grid = tuple(d // t for d, t in zip(xp.shape, tile))
+    nd = len(tile)
+    interleaved = xp.reshape(sum(((g, t) for g, t in zip(grid, tile)), ()))
+    perm = tuple(range(0, 2 * nd, 2)) + tuple(range(1, 2 * nd, 2))
+    return interleaved.transpose(perm).reshape((-1,) + tile)
+
+
+def stitch_tiles(tiles: jax.Array, grid: tuple[int, ...]) -> jax.Array:
+    """Inverse of :func:`split_tiles`: [prod(g), *tile] -> padded volume."""
+    tile = tiles.shape[1:]
+    nd = len(tile)
+    blocks = tiles.reshape(grid + tile)
+    perm = sum(((d, nd + d) for d in range(nd)), ())
+    return blocks.transpose(perm).reshape(tuple(g * t for g, t in zip(grid, tile)))
+
+
+# ---------------------------------------------------------------------------
+# container
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TiledCompressed:
+    """Self-describing tiled artifact (``GWTC``, docs/TILED_FORMAT.md).
+
+    ``tile_blobs[i]`` is an independent, self-describing entropy lane
+    (``RPRE`` blob) for tile ``i`` in row-major grid order."""
+
+    shape: tuple[int, ...]
+    tile: tuple[int, ...]
+    eb_abs: float
+    backend: str
+    tile_blobs: list[bytes]
+    extras: dict = field(default_factory=dict)
+    # serialization cache keyed on the extras fingerprint (same scheme as
+    # SZCompressed): GWLZ.compress_tiled asks for nbytes before and after
+    # attaching the model, and size_report() asks again
+    _blob_cache: tuple | None = field(default=None, init=False, repr=False, compare=False)
+
+    @property
+    def grid(self) -> tuple[int, ...]:
+        return tile_grid(self.shape, self.tile)
+
+    @property
+    def padded_shape(self) -> tuple[int, ...]:
+        return tuple(g * t for g, t in zip(self.grid, self.tile))
+
+    @property
+    def n_tiles(self) -> int:
+        return int(np.prod(self.grid))
+
+    @property
+    def nbytes(self) -> int:
+        return len(self.to_bytes())
+
+    def size_report(self) -> dict:
+        lanes = sum(len(b) for b in self.tile_blobs)
+        extras = sum(len(v) for v in self.extras.values())
+        index = 8 * len(self.tile_blobs)
+        return {"lanes": lanes, "index": index, "extras": extras,
+                "header": _HDR.size + 16 * len(self.shape), "total": self.nbytes}
+
+    def to_bytes(self) -> bytes:
+        key = tuple(sorted(self.extras.items()))
+        if self._blob_cache is not None and self._blob_cache[0] == key:
+            return self._blob_cache[1]
+        blob = self._serialize()
+        self._blob_cache = (key, blob)
+        return blob
+
+    def _serialize(self) -> bytes:
+        nd = len(self.shape)
+        hdr = _HDR.pack(_MAGIC, _VERSION, nd, _BACKENDS[self.backend], 0,
+                        np.float64(self.eb_abs).view(np.uint64), len(self.tile_blobs))
+        dims = struct.pack(f"<{nd}q", *self.shape) + struct.pack(f"<{nd}q", *self.tile)
+        index = np.asarray([len(b) for b in self.tile_blobs], np.uint64).tobytes()
+        extras_items = sorted(self.extras.items())
+        extras_blob = struct.pack("<I", len(extras_items))
+        for k, v in extras_items:
+            kb = k.encode()
+            extras_blob += struct.pack("<II", len(kb), len(v)) + kb + v
+        return hdr + dims + index + b"".join(self.tile_blobs) + extras_blob
+
+    @staticmethod
+    def from_bytes(blob: bytes) -> "TiledCompressed":
+        magic, ver, nd, backend, _pad, ebbits, n_tiles = _HDR.unpack_from(blob, 0)
+        assert magic == _MAGIC, "bad GWTC blob"
+        assert ver == _VERSION, f"unsupported GWTC version {ver}"
+        off = _HDR.size
+        shape = struct.unpack_from(f"<{nd}q", blob, off)
+        off += 8 * nd
+        tile = struct.unpack_from(f"<{nd}q", blob, off)
+        off += 8 * nd
+        lens = np.frombuffer(blob, np.uint64, n_tiles, offset=off)
+        off += 8 * n_tiles
+        tile_blobs = []
+        for ln in lens.astype(np.int64):
+            tile_blobs.append(blob[off : off + ln])
+            off += int(ln)
+        (n_extras,) = struct.unpack_from("<I", blob, off)
+        off += 4
+        extras = {}
+        for _ in range(n_extras):
+            klen, vlen = struct.unpack_from("<II", blob, off)
+            off += 8
+            k = blob[off : off + klen].decode()
+            off += klen
+            extras[k] = blob[off : off + vlen]
+            off += vlen
+        return TiledCompressed(
+            shape=tuple(shape), tile=tuple(tile),
+            eb_abs=float(np.uint64(ebbits).view(np.float64)),
+            backend=_BACKENDS_INV[backend], tile_blobs=tile_blobs, extras=extras,
+        )
+
+
+# ---------------------------------------------------------------------------
+# batched transform passes
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("eb",))
+def _decode_tiles(codes: jax.Array, eb: float) -> jax.Array:
+    """[B, *tile] int32 codes -> float32 recon: vmap of the production
+    per-volume Lorenzo decode (exact integer cumsum + dequantize).
+
+    Elementwise-exact in the batch axis, so region decode and full decode
+    reconstruct bit-identically whatever subset of tiles they batch."""
+    return jax.vmap(lambda c: lorenzo_decode(c, eb, jnp.float32))(codes)
+
+
+def _encode_tiles_batched(tiles: jax.Array, eb: float, use_pallas: bool | None):
+    from repro.launch import sharding
+
+    fn = lambda t: ops.lorenzo_quant_tiles_op(t, eb, use_pallas=use_pallas)
+    return sharding.map_tiles(fn, tiles)
+
+
+def _decode_tiles_batched(codes: jax.Array, eb: float):
+    from repro.launch import sharding
+
+    return sharding.map_tiles(lambda c: _decode_tiles(c, eb), codes)
+
+
+def _lane_workers(n_lanes: int, workers: int | None) -> int:
+    if workers is not None:
+        return max(1, min(workers, n_lanes))
+    cores = os.cpu_count() or 1
+    return max(1, min(cores, 8, n_lanes)) if cores > 2 else 1
+
+
+def _map_lanes(fn, items, workers: int | None):
+    w = _lane_workers(len(items), workers)
+    if w <= 1:
+        return [fn(it) for it in items]
+    with ThreadPoolExecutor(w) as ex:
+        return list(ex.map(fn, items))
+
+
+# ---------------------------------------------------------------------------
+# engine API
+# ---------------------------------------------------------------------------
+
+
+def compress_tiled(
+    x: jax.Array,
+    tile=(64, 64, 64),
+    *,
+    rel_eb: float | None = None,
+    abs_eb: float | None = None,
+    backend: str = "huffman+zlib",
+    use_pallas: bool | None = None,
+    workers: int | None = None,
+) -> tuple[TiledCompressed, jax.Array]:
+    """Tile-grid compress; returns (artifact, reconstruction).
+
+    The reconstruction is the decode program's own output (batched integer
+    cumsum over the code tiles), cropped to ``x.shape`` — exactly what
+    :func:`decompress_tiled` will produce."""
+    if backend not in _BACKENDS:
+        raise ValueError(f"unknown entropy backend {backend!r}")
+    x = jnp.asarray(x, jnp.float32)
+    tile = normalize_tile(tile, x.ndim)
+    eb = resolve_eb(x, rel_eb, abs_eb)
+    xp = pad_to_tiles(x, tile)
+    tiles = split_tiles(xp, tile)
+    codes = _encode_tiles_batched(tiles, eb, use_pallas)
+    recon = stitch_tiles(_decode_tiles_batched(codes, eb), tile_grid(x.shape, tile))
+
+    codes_np = np.asarray(codes)
+    blobs = _map_lanes(lambda c: entropy.encode_codes(c, backend), list(codes_np), workers)
+    artifact = TiledCompressed(
+        shape=tuple(x.shape), tile=tile, eb_abs=eb, backend=backend, tile_blobs=blobs)
+    return artifact, recon[tuple(slice(0, d) for d in x.shape)]
+
+
+def decode_lanes(artifact: TiledCompressed, lane_ids, *, workers: int | None = None) -> jax.Array:
+    """Entropy-decode the given lanes and reconstruct them: [len(ids), *tile].
+
+    Only the named lanes are touched — this is the random-access primitive
+    both :func:`decompress_tiled` and :func:`decompress_region` build on."""
+    lane_ids = list(lane_ids)
+    blobs = [artifact.tile_blobs[i] for i in lane_ids]
+    codes = _map_lanes(
+        lambda b: entropy.decode_codes(b, artifact.tile), blobs, workers)
+    DECODE_STATS["tiles_decoded"] = len(lane_ids)
+    DECODE_STATS["tiles_total"] = artifact.n_tiles
+    return _decode_tiles_batched(jnp.asarray(np.stack(codes)), artifact.eb_abs)
+
+
+def decompress_tiled(
+    artifact: TiledCompressed, *, workers: int | None = None, tile_transform=None
+) -> jax.Array:
+    """Full decode: every lane, stitched and cropped to the original shape.
+
+    ``tile_transform([K, *tile]) -> [K, *tile]`` post-processes decoded tiles
+    before stitching (the GWLZ pipeline enhances per tile through it; it must
+    act per-tile so region and full decode stay consistent)."""
+    recon = decode_lanes(artifact, range(artifact.n_tiles), workers=workers)
+    if tile_transform is not None:
+        recon = tile_transform(recon)
+    out = stitch_tiles(recon, artifact.grid)
+    return out[tuple(slice(0, d) for d in artifact.shape)]
+
+
+def normalize_roi(roi, shape: tuple[int, ...]) -> tuple[tuple[int, int], ...]:
+    """ROI as slices or (start, stop) pairs -> clamped (start, stop) tuples."""
+    if len(roi) != len(shape):
+        raise ValueError(f"roi rank {len(roi)} != volume rank {len(shape)}")
+    out = []
+    for r, d in zip(roi, shape):
+        if isinstance(r, slice):
+            if r.step not in (None, 1):
+                raise ValueError("roi slices must have step 1")
+            start, stop, _ = r.indices(d)
+        else:
+            start, stop = r
+            start = start + d if start < 0 else start
+            stop = stop + d if stop < 0 else stop
+            start, stop = max(0, min(start, d)), max(0, min(stop, d))
+        if stop <= start:
+            raise ValueError(f"empty roi extent {r} on a dim of size {d}")
+        out.append((int(start), int(stop)))
+    return tuple(out)
+
+
+def region_tiles(artifact: TiledCompressed, roi) -> tuple[np.ndarray, tuple]:
+    """(flat lane ids of tiles intersecting ``roi``, per-dim tile ranges)."""
+    bounds = normalize_roi(roi, artifact.shape)
+    ranges = tuple((lo // t, -(-hi // t))
+                   for (lo, hi), t in zip(bounds, artifact.tile))
+    axes = [np.arange(a, b) for a, b in ranges]
+    coords = np.meshgrid(*axes, indexing="ij")
+    ids = np.ravel_multi_index([c.ravel() for c in coords], artifact.grid)
+    return ids, (bounds, ranges)
+
+
+def decompress_region(
+    artifact: TiledCompressed, roi, *, workers: int | None = None, tile_transform=None
+) -> jax.Array:
+    """Decode only the tiles intersecting ``roi``; returns the ROI's values.
+
+    Bit-identical to ``decompress_tiled(artifact)[roi]`` — the per-tile
+    transform is elementwise-exact, so the subset batch reconstructs the
+    same values the full batch would (any ``tile_transform`` must preserve
+    this by acting on each tile independently)."""
+    ids, (bounds, ranges) = region_tiles(artifact, roi)
+    recon = decode_lanes(artifact, ids.tolist(), workers=workers)
+    if tile_transform is not None:
+        recon = tile_transform(recon)
+    sub_grid = tuple(b - a for a, b in ranges)
+    block = stitch_tiles(recon, sub_grid)
+    crop = tuple(slice(lo - a * t, hi - a * t)
+                 for (lo, hi), (a, _b), t in zip(bounds, ranges, artifact.tile))
+    return block[crop]

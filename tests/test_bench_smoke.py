@@ -26,6 +26,10 @@ def test_run_fast_smoke():
     assert any(n.startswith("throughput/entropy/hcz_decode") for n in names), names
     assert any(n.startswith("throughput/entropy/decode_speedup") for n in names), names
     assert any(n.startswith("throughput/compress/interp/huffman+zlib") for n in names), names
+    # the tiled-engine rows must be present (random-access decode anchor)
+    assert "throughput/tiled/compress" in names, names
+    tiled_rows = [l for l in lines[1:] if l.split(",")[0] == "throughput/tiled/region_decode"]
+    assert tiled_rows and "speedup_vs_full=" in tiled_rows[0], lines
 
 
 def test_run_rejects_unknown_module():
