@@ -48,7 +48,8 @@ def _entropy_stage_bench() -> None:
 
 
 def _tiled_bench() -> None:
-    """Tiled engine: compress, full decode, and single-tile region decode.
+    """Tiled engine: compress, full decode, and single-tile region decode,
+    per registered predictor (the tiled path dispatches any of them).
 
     The region row reports the speedup over full decode — random-access
     reads must only pay for intersecting entropy lanes (target >= 4x at the
@@ -57,23 +58,53 @@ def _tiled_bench() -> None:
 
     x = jnp.asarray(nyx_like_field(TILED_VOLUME, "temperature", seed=7))
     nbytes = x.size * 4
-    comp = SZCompressor()
-    (art, _recon), us = timed(lambda: comp.compress_tiled(x, TILED_TILE, rel_eb=1e-3),
-                              repeats=1)
-    emit("throughput/tiled/compress", us,
-         f"MBps={nbytes/us:.1f};cr={nbytes/art.nbytes:.1f};tiles={art.n_tiles}")
+    for pred in ("lorenzo", "interp"):
+        comp = SZCompressor(predictor=pred)
+        (art, _recon), us = timed(
+            lambda: comp.compress_tiled(x, TILED_TILE, rel_eb=1e-3), repeats=1)
+        emit(f"throughput/tiled/compress/{pred}", us,
+             f"MBps={nbytes/us:.1f};cr={nbytes/art.nbytes:.1f};tiles={art.n_tiles}")
 
-    full, us_full = timed(lambda: tiled.decompress_tiled(art), repeats=3)
-    emit("throughput/tiled/decompress_full", us_full, f"MBps={nbytes/us_full:.1f}")
+        full, us_full = timed(lambda: tiled.decompress_tiled(art), repeats=3)
+        emit(f"throughput/tiled/decompress_full/{pred}", us_full,
+             f"MBps={nbytes/us_full:.1f}")
 
-    roi = tuple(slice(0, t) for t in art.tile)  # exactly one tile
-    reg, us_reg = timed(lambda: tiled.decompress_region(art, roi), repeats=3)
-    assert np.array_equal(np.asarray(reg), np.asarray(full)[roi]), \
-        "region decode must equal the full decode's crop"
-    lanes = tiled.DECODE_STATS["tiles_decoded"]
-    emit("throughput/tiled/region_decode", us_reg,
-         f"MBps={reg.size*4/us_reg:.1f};speedup_vs_full={us_full/us_reg:.1f}x;"
-         f"lanes={lanes}/{art.n_tiles}")
+        roi = tuple(slice(0, t) for t in art.tile)  # exactly one tile
+        reg, us_reg = timed(lambda: tiled.decompress_region(art, roi), repeats=3)
+        assert np.array_equal(np.asarray(reg), np.asarray(full)[roi]), \
+            "region decode must equal the full decode's crop"
+        lanes = tiled.DECODE_STATS["tiles_decoded"]
+        emit(f"throughput/tiled/region_decode/{pred}", us_reg,
+             f"MBps={reg.size*4/us_reg:.1f};speedup_vs_full={us_full/us_reg:.1f}x;"
+             f"lanes={lanes}/{art.n_tiles}")
+
+
+def _tile_enhance_bench() -> None:
+    """Batched (lax.map) tile enhancement vs the per-tile Python loop.
+
+    Both paths are bit-identical (asserted); the batched row reports the
+    measured speedup from collapsing ~n_tiles jit dispatches into one."""
+    from repro.core.pipeline import GWLZ, deserialize_model
+    from repro.core.trainer import GWLZTrainConfig, enhance_tiles, enhance_tiles_looped
+    from repro.sz import tiled
+
+    x = jnp.asarray(nyx_like_field(TILED_VOLUME, "temperature", seed=9))
+    tile = tuple(t // 2 for t in TILED_TILE)  # more tiles -> dispatch-bound loop
+    gw = GWLZ(train_cfg=GWLZTrainConfig(
+        n_groups=4, epochs=2, batch_size=8, min_group_pixels=64))
+    art, _ = gw.compress_tiled(x, tile, rel_eb=1e-3)
+    model = deserialize_model(art.extras["gwlz"])
+    recon_tiles, _ = tiled.decode_lanes(art, range(art.n_tiles))
+
+    batched, us_b = timed(
+        lambda: enhance_tiles(recon_tiles, model).block_until_ready(), repeats=3)
+    looped, us_l = timed(
+        lambda: enhance_tiles_looped(recon_tiles, model).block_until_ready(), repeats=3)
+    assert np.array_equal(np.asarray(batched), np.asarray(looped)), \
+        "batched tile enhancement must be bit-identical to the looped path"
+    emit("throughput/tiled/enhance_batched", us_b,
+         f"MBps={batched.size*4/us_b:.1f};speedup_vs_loop={us_l/us_b:.2f}x;"
+         f"tiles={art.n_tiles}")
 
 
 def main() -> None:
@@ -96,6 +127,7 @@ def main() -> None:
 
     _entropy_stage_bench()
     _tiled_bench()
+    _tile_enhance_bench()
 
     # kernels (interpret mode on CPU: correctness-path timing only)
     _, us = timed(lambda: ops.lorenzo_quant_op(x, 1.0, use_pallas=False).block_until_ready(), repeats=3)

@@ -15,6 +15,7 @@ from repro.core.trainer import (
     GWLZModel,
     GWLZTrainConfig,
     enhance,
+    enhance_tiles,
     train_enhancers,
     train_enhancers_tiled,
 )
@@ -114,20 +115,22 @@ class GWLZ:
         self.train_cfg = train_cfg
         self.clamp_to_bound = clamp_to_bound
 
-    def compress(
-        self, x: jax.Array, *, rel_eb: float | None = None, abs_eb: float | None = None,
-        callback=None,
-    ) -> tuple[SZCompressed, GWLZStats]:
-        x = jnp.asarray(x, jnp.float32)
-        artifact, recon = self.sz.compress(x, rel_eb=rel_eb, abs_eb=abs_eb)
+    # -- shared orchestration core (monolithic and tiled paths) ----------------
+
+    def _clamp(self, artifact) -> float | None:
+        return artifact.eb_abs if self.clamp_to_bound else None
+
+    def _finish_compress(
+        self, x, artifact, recon, *, train_fn, enhance_fn, callback
+    ) -> tuple["object", GWLZStats]:
+        """The single train+attach+enhance+stats sequence both compression
+        front ends share: fit enhancers on (recon, residual), attach the
+        serialized model to the artifact's extras, enhance the training
+        volume, and report the paper's metrics."""
         sz_bytes = artifact.nbytes
-        residual = x - recon
-
-        model, history = train_enhancers(recon, residual, self.train_cfg, callback=callback)
+        model, history = train_fn(recon, x - recon, callback)
         artifact.extras["gwlz"] = serialize_model(model)
-
-        clamp = artifact.eb_abs if self.clamp_to_bound else None
-        enhanced = enhance(recon, model, clamp_eb=clamp)
+        enhanced = enhance_fn(recon, model)
         total_bytes = artifact.nbytes
         stats = GWLZStats(
             psnr_sz=float(metrics.psnr(x, recon)),
@@ -142,6 +145,19 @@ class GWLZ:
             loss_history=history["loss"],
         )
         return artifact, stats
+
+    def compress(
+        self, x: jax.Array, *, rel_eb: float | None = None, abs_eb: float | None = None,
+        callback=None,
+    ) -> tuple[SZCompressed, GWLZStats]:
+        x = jnp.asarray(x, jnp.float32)
+        artifact, recon = self.sz.compress(x, rel_eb=rel_eb, abs_eb=abs_eb)
+        return self._finish_compress(
+            x, artifact, recon,
+            train_fn=lambda r, res, cb: train_enhancers(r, res, self.train_cfg, callback=cb),
+            enhance_fn=lambda r, m: enhance(r, m, clamp_eb=self._clamp(artifact)),
+            callback=callback,
+        )
 
     def decompress(self, artifact: SZCompressed) -> jax.Array:
         recon = self.sz.decompress(artifact)
@@ -149,70 +165,68 @@ class GWLZ:
         if blob is None:
             return recon
         model = deserialize_model(blob)
-        clamp = artifact.eb_abs if self.clamp_to_bound else None
-        return enhance(recon, model, clamp_eb=clamp)
+        return enhance(recon, model, clamp_eb=self._clamp(artifact))
 
     # -- tiled path (GWTC container, random-access decode) --------------------
 
     def _tile_enhancer(self, artifact):
         """Per-tile enhancement transform for decoded tile batches, or None.
 
-        Deliberately a per-tile loop, not one batched call: region and full
-        decode see different tile counts, so folding tiles into a shared
-        slice batch (or vmapping the tile axis) would compile different
-        batched programs whose ulps disagree — enhancing each tile at
-        identical shapes is what upholds the bit-identity contract
-        ``repro.sz.tiled`` requires of any ``tile_transform``."""
+        One ``lax.map``-batched call (``trainer.enhance_tiles``) that
+        compiles a single fixed-tile-shape per-tile program: the per-tile
+        program does not depend on how many tiles are batched, so region
+        decode and full decode enhance every tile bit-identically — the
+        contract ``repro.sz.tiled`` requires of any ``tile_transform`` —
+        while the decode hot path pays one dispatch instead of ~n_tiles."""
         blob = artifact.extras.get("gwlz")
         if blob is None:
             return None
         model = deserialize_model(blob)
-        clamp = artifact.eb_abs if self.clamp_to_bound else None
+        clamp = self._clamp(artifact)
 
         def transform(tiles: jax.Array) -> jax.Array:
-            return jnp.stack([enhance(t, model, clamp_eb=clamp) for t in tiles])
+            return enhance_tiles(tiles, model, clamp_eb=clamp)
 
         return transform
 
     def compress_tiled(
         self, x: jax.Array, tile=(64, 64, 64), *,
-        rel_eb: float | None = None, abs_eb: float | None = None, callback=None,
+        rel_eb: float | None = None, abs_eb: float | None = None,
+        predictor: str | None = None, callback=None,
     ) -> tuple["object", GWLZStats]:
-        """Tile-grid GWLZ: tiled SZ compress, then ONE batched enhancer
-        training pass over the per-tile slice stack; the model rides in the
-        GWTC container's extras.  Returns (TiledCompressed, stats)."""
+        """Tile-grid GWLZ: tiled SZ compress (any registered predictor), then
+        ONE batched enhancer training pass over the per-tile slice stack; the
+        model rides in the GWTC container's extras.  Returns (TiledCompressed,
+        stats)."""
         from repro.sz import tiled
 
         x = jnp.asarray(x, jnp.float32)
         if x.ndim != 3:
             raise ValueError("tiled GWLZ needs a 3D volume (enhancers are 2D CNNs)")
-        artifact, recon = self.sz.compress_tiled(x, tile, rel_eb=rel_eb, abs_eb=abs_eb)
-        sz_bytes = artifact.nbytes
-        residual = x - recon
+        artifact, recon = self.sz.compress_tiled(
+            x, tile, rel_eb=rel_eb, abs_eb=abs_eb, predictor=predictor)
 
-        recon_tiles = tiled.split_tiles(tiled.pad_to_tiles(recon, artifact.tile), artifact.tile)
-        resid_tiles = tiled.split_tiles(tiled.pad_to_tiles(residual, artifact.tile), artifact.tile)
-        model, history = train_enhancers_tiled(
-            recon_tiles, resid_tiles, self.train_cfg, callback=callback)
-        artifact.extras["gwlz"] = serialize_model(model)
+        # Train on the DECODER'S OWN tiles — the exact arrays decompression
+        # will feed the enhancer.  Re-padding the cropped recon would differ
+        # in the pad region for interp (its decode of the padded input is not
+        # edge replication of the crop), skewing training and stats away
+        # from what gw.decompress_tiled(artifact) actually produces.
+        recon_tiles, _ = tiled.decode_lanes(artifact, range(artifact.n_tiles))
+        resid_tiles = tiled.split_tiles(
+            tiled.pad_to_tiles(x, artifact.tile), artifact.tile) - recon_tiles
 
-        enhanced_tiles = self._tile_enhancer(artifact)(recon_tiles)
-        enhanced = tiled.stitch_tiles(enhanced_tiles, artifact.grid)[
-            tuple(slice(0, d) for d in x.shape)]
-        total_bytes = artifact.nbytes
-        stats = GWLZStats(
-            psnr_sz=float(metrics.psnr(x, recon)),
-            psnr_gwlz=float(metrics.psnr(x, enhanced)),
-            cr_sz=float(x.nbytes / sz_bytes),
-            cr_gwlz=float(x.nbytes / total_bytes),
-            overhead=float((total_bytes - sz_bytes) / sz_bytes),
-            max_err_sz=float(metrics.max_abs_err(x, recon)),
-            max_err_gwlz=float(metrics.max_abs_err(x, enhanced)),
-            eb_abs=artifact.eb_abs,
-            n_model_params=model.n_params,
-            loss_history=history["loss"],
-        )
-        return artifact, stats
+        def train_fn(_recon, _residual, cb):
+            return train_enhancers_tiled(
+                recon_tiles, resid_tiles, self.train_cfg, callback=cb)
+
+        def enhance_fn(_recon, model):
+            enhanced_tiles = self._tile_enhancer(artifact)(recon_tiles)
+            return tiled.stitch_tiles(enhanced_tiles, artifact.grid)[
+                tuple(slice(0, d) for d in x.shape)]
+
+        return self._finish_compress(
+            x, artifact, recon, train_fn=train_fn, enhance_fn=enhance_fn,
+            callback=callback)
 
     def decompress_tiled(self, artifact, *, workers: int | None = None) -> jax.Array:
         from repro.sz import tiled

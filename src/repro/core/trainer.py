@@ -275,6 +275,71 @@ def _enhance_slices(params, bn_state, xs, edges, rscale, *, n_groups, residual_l
     return xhat.sum(axis=0)
 
 
+def _enhance_one_tile(params, bn_state, t, edges, rscale, clamp_eb, *,
+                      n_groups, residual_learning, slice_axis, batch, use_clamp):
+    """One tile's enhancement as a pure traced program — the same op sequence
+    :func:`enhance` runs (moveaxis, slice-batched ``_enhance_slices``,
+    optional clamp, concat, moveaxis back), so the two paths agree bit-for-
+    bit on every backend."""
+    xs = jnp.moveaxis(t, slice_axis, 0)
+    outs = []
+    for i in range(0, xs.shape[0], batch):
+        xb = xs[i : i + batch]
+        out = _enhance_slices(params, bn_state, xb, edges, rscale,
+                              n_groups=n_groups, residual_learning=residual_learning)
+        if use_clamp:
+            out = jnp.clip(out, xb - clamp_eb, xb + clamp_eb)
+        outs.append(out)
+    return jnp.moveaxis(jnp.concatenate(outs, axis=0), 0, slice_axis)
+
+
+@partial(jax.jit, static_argnames=("n_groups", "residual_learning", "slice_axis",
+                                   "batch", "use_clamp"))
+def _enhance_tiles_mapped(params, bn_state, tiles, edges, rscale, clamp_eb, *,
+                          n_groups, residual_learning, slice_axis, batch, use_clamp):
+    return jax.lax.map(
+        lambda t: _enhance_one_tile(
+            params, bn_state, t, edges, rscale, clamp_eb, n_groups=n_groups,
+            residual_learning=residual_learning, slice_axis=slice_axis,
+            batch=batch, use_clamp=use_clamp),
+        tiles)
+
+
+def enhance_tiles(
+    tiles: jax.Array,
+    model: GWLZModel,
+    *,
+    clamp_eb: float | None = None,
+    batch: int = 64,
+) -> jax.Array:
+    """Batched per-tile enhancement: ``[K, *tile] -> [K, *tile]``.
+
+    One ``lax.map`` over the tile batch compiles a single fixed-tile-shape
+    per-tile program and runs it K times inside one dispatch — the per-tile
+    program is independent of K, so region decode (small K) and full decode
+    (K = n_tiles) enhance every tile bit-identically, which is the contract
+    ``repro.sz.tiled`` requires of any ``tile_transform``.  Replaces the
+    per-tile Python loop (~n_tiles jit dispatches on the decode hot path;
+    speedup measured by ``throughput/tiled/enhance_batched``)."""
+    cfg = model.cfg
+    clamp = jnp.float32(0.0 if clamp_eb is None else clamp_eb)
+    return _enhance_tiles_mapped(
+        model.params, model.bn_state, tiles, model.edges, model.rscale, clamp,
+        n_groups=cfg.n_groups, residual_learning=cfg.residual_learning,
+        slice_axis=cfg.slice_axis, batch=batch, use_clamp=clamp_eb is not None)
+
+
+def enhance_tiles_looped(
+    tiles: jax.Array,
+    model: GWLZModel,
+    *,
+    clamp_eb: float | None = None,
+) -> jax.Array:
+    """Per-tile Python-loop reference (the pre-batching hot path), kept as
+    the parity baseline for tests and the enhancer-speedup benchmark."""
+    return jnp.stack([enhance(t, model, clamp_eb=clamp_eb) for t in tiles])
+
+
 def enhance(
     xprime: jax.Array,
     model: GWLZModel,

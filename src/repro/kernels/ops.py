@@ -6,6 +6,8 @@ tests exercise the kernels in interpret mode.
 """
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
 
@@ -37,6 +39,25 @@ def lorenzo_quant_tiles_op(x, eb, *, use_pallas: bool | None = None,
         return lorenzo_quant_tiles(
             x, eb, interpret=not _on_tpu() if interpret is None else interpret)
     return ref.lorenzo_quant_tiles_ref(x, eb)
+
+
+@partial(jax.jit, static_argnames=("eb",))
+def _lorenzo_decode_tiles(codes, eb):
+    from repro.sz.predictor import lorenzo_decode
+
+    return jax.vmap(lambda c: lorenzo_decode(c, eb, jnp.float32))(codes)
+
+
+def lorenzo_decode_tiles_op(codes, eb):
+    """Batched exact inverse of :func:`lorenzo_quant_tiles_op`: integer cumsum
+    per tile + dequantize ([B, *tile] int32 -> float32).
+
+    Elementwise-exact in the batch axis (integer cumsums are exact, the
+    dequantize multiply is per-element), so any subset of tiles reconstructs
+    the bits the full batch would — the contract random-access region decode
+    relies on.  Pure vectorized jnp on every backend (cumsum lowers well
+    everywhere; no Pallas variant is needed)."""
+    return _lorenzo_decode_tiles(codes, float(eb))
 
 
 def enhancer_fused_op(x, params, bn_state, *, use_pallas: bool | None = None,

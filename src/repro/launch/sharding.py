@@ -157,10 +157,14 @@ def tile_mesh(devices=None):
 def map_tiles(fn, tiles, *extra, mesh=None):
     """Fan a tile-batched op across the device mesh via ``shard_map``.
 
-    ``fn(tiles, *extra)`` must map axis 0 elementwise (tile-independent) and
-    preserve the batch axis; ``extra`` operands are replicated.  The batch is
-    padded to a device multiple with repeats of tile 0 (cheap, discarded).
-    On a single device this is a plain call — no dispatch overhead."""
+    ``tiles`` may be one array or a pytree of arrays sharing the tile batch
+    on axis 0 (e.g. the interp predictor's ``(codes, omask, ovals)``), and
+    ``fn(tiles, *extra)`` may likewise return any pytree of batch-carrying
+    arrays — both sides use ``P("tiles")`` as a pytree-prefix spec.  ``fn``
+    must map axis 0 elementwise (tile-independent) and preserve the batch
+    axis; ``extra`` operands are replicated.  The batch is padded to a device
+    multiple with repeats of tile 0 (cheap, discarded).  On a single device
+    this is a plain call — no dispatch overhead."""
     mesh = tile_mesh() if mesh is None else mesh
     n = int(mesh.devices.size)
     if n <= 1:
@@ -168,14 +172,15 @@ def map_tiles(fn, tiles, *extra, mesh=None):
     import jax.numpy as jnp
     from jax.experimental.shard_map import shard_map
 
-    B = tiles.shape[0]
+    B = jax.tree.leaves(tiles)[0].shape[0]
     pad = (-B) % n
     if pad:
-        tiles = jnp.concatenate([tiles, jnp.repeat(tiles[:1], pad, axis=0)])
+        tiles = jax.tree.map(
+            lambda t: jnp.concatenate([t, jnp.repeat(t[:1], pad, axis=0)]), tiles)
     in_specs = (P("tiles"),) + (P(),) * len(extra)
     out = shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=P("tiles"),
                     check_rep=False)(tiles, *extra)
-    return out[:B] if pad else out
+    return jax.tree.map(lambda o: o[:B], out) if pad else out
 
 
 def cache_pspecs(cache, mesh, opts: ShardingOptions) -> object:

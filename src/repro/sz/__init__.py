@@ -15,6 +15,9 @@ from repro.sz.predictor import (
     lorenzo_decode,
     interp_encode,
     interp_decode,
+    get_predictor,
+    register_predictor,
+    PREDICTORS,
 )
 from repro.sz.szjax import SZCompressor, SZCompressed, compress, decompress
 from repro.sz.tiled import (
@@ -33,6 +36,9 @@ __all__ = [
     "lorenzo_decode",
     "interp_encode",
     "interp_decode",
+    "get_predictor",
+    "register_predictor",
+    "PREDICTORS",
     "SZCompressor",
     "SZCompressed",
     "compress",

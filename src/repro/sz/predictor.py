@@ -16,10 +16,12 @@ stragglers through the outlier mechanism in :mod:`repro.sz.quantizer`).
 from __future__ import annotations
 
 import math
+import struct
 from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.sz.quantizer import (
     dequantize_pre,
@@ -184,6 +186,28 @@ def _interp_decode_padded(codes: jax.Array, omask: jax.Array, ovals: jax.Array, 
     return recon
 
 
+def _promote_stragglers(xp, codes, omask, ovals, eb, coarse, decode_fn):
+    """Bound enforcement shared by the monolithic and tiled interp encoders.
+
+    Re-derives the recon the *decoder* will produce and promotes any point
+    past the bound (outside the coarse grid, which is Lorenzo-coded and
+    exact) to an exact-valued outlier, until clean.  The loop terminates:
+    each iteration strictly grows ``omask`` (promoted points decode exactly
+    thereafter), which is bounded by the volume size; in practice it runs
+    1-2 rounds.  On exit ``recon == decode_fn(codes, omask, ovals)`` and the
+    bound holds on every promotable point.
+    """
+    recon = decode_fn(codes, omask, ovals)
+    while True:
+        bad = (jnp.abs(recon - xp) > eb) & ~omask & ~coarse
+        if not bool(bad.any()):
+            break
+        omask = omask | bad
+        ovals = jnp.where(bad, xp, ovals)
+        recon = decode_fn(codes, omask, ovals)
+    return omask, ovals, recon
+
+
 def interp_encode(x: jax.Array, eb, order: str = "cubic", max_levels: int = 5):
     """Multi-level interpolation encode.
 
@@ -206,18 +230,9 @@ def interp_encode(x: jax.Array, eb, order: str = "cubic", max_levels: int = 5):
     # never consults omask there), so only interp targets are promotable.
     S = 1 << levels
     coarse = jnp.zeros(pshape, bool).at[tuple(slice(0, None, S) for _ in pshape)].set(True)
-    # Invariants on exit: recon == decode(codes, omask, ovals) AND the bound
-    # holds on every promotable point.  The loop terminates: each iteration
-    # strictly grows omask (promoted points decode exactly thereafter), which
-    # is bounded by the volume size; in practice it runs 1-2 rounds.
-    recon = _interp_decode_padded(codes, omask, ovals, eb, levels, order)
-    while True:
-        bad = (jnp.abs(recon - xp) > eb) & ~omask & ~coarse
-        if not bool(bad.any()):
-            break
-        omask = omask | bad
-        ovals = jnp.where(bad, xp, ovals)
-        recon = _interp_decode_padded(codes, omask, ovals, eb, levels, order)
+    omask, ovals, recon = _promote_stragglers(
+        xp, codes, omask, ovals, eb, coarse,
+        lambda c, m, v: _interp_decode_padded(c, m, v, eb, levels, order))
     meta = (tuple(x.shape), pshape, levels)
     return codes, omask, ovals, recon, meta
 
@@ -226,3 +241,254 @@ def interp_decode(codes, omask, ovals, eb, meta, order: str = "cubic"):
     orig_shape, _pshape, levels = meta
     recon = _interp_decode_padded(codes, omask, ovals, eb, levels, order)
     return recon[tuple(slice(0, d) for d in orig_shape)]
+
+
+# ---------------------------------------------------------------------------
+# Tile-predictor registry (docs/ARCHITECTURE.md)
+# ---------------------------------------------------------------------------
+#
+# The tiled engine (repro.sz.tiled) treats every tile as an independent
+# prediction domain and dispatches the per-tile transform through this
+# registry instead of hardwiring a predictor.  A tile predictor provides
+#
+#   * ``plan(tile, max_levels)``            -> static per-tile config (levels),
+#   * ``encode_tiles(tiles, eb, ...)``      -> (payload pytree, recon tiles),
+#   * ``decode_tiles(payload, eb, ...)``    -> recon tiles,
+#   * ``lane_bytes`` / ``parse_lane``       -> per-tile lane (de)serialization,
+#
+# where all payload leaves carry the tile batch on axis 0.  Decoding any
+# subset of tiles must reproduce the exact bits the full batch would — the
+# region==full bit-identity contract random-access decode relies on.  No op
+# may mix tiles, AND any float decode must run through a compiled program
+# that does not vary with the batch size (integer transforms are exact under
+# any batching; float ones pin a fixed-width executable — see
+# ``_INTERP_DECODE_CHUNK``).  Batched encode passes fan across the device
+# mesh via ``repro.launch.sharding.map_tiles``.
+
+# Canonical wire ids shared by the SZJX and GWTC containers.
+PRED_IDS = {"lorenzo": 0, "interp": 1}
+PRED_NAMES = {v: k for k, v in PRED_IDS.items()}
+ORDER_IDS = {"linear": 0, "cubic": 1}
+ORDER_NAMES = {v: k for k, v in ORDER_IDS.items()}
+
+PREDICTORS: dict[str, "TilePredictor"] = {}
+
+
+def register_predictor(pred: "TilePredictor") -> "TilePredictor":
+    PREDICTORS[pred.name] = pred
+    return pred
+
+
+def get_predictor(name: str) -> "TilePredictor":
+    try:
+        return PREDICTORS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown predictor {name!r} (registered: {sorted(PREDICTORS)})"
+        ) from None
+
+
+class TilePredictor:
+    """Protocol for per-tile prediction transforms (see module comment)."""
+
+    name: str
+
+    def plan(self, tile: tuple[int, ...], max_levels: int = 5) -> int:
+        """Static per-tile-shape config: interp level count (0 when unused)."""
+        raise NotImplementedError
+
+    def encode_tiles(self, tiles, eb, *, order: str, levels: int,
+                     use_pallas: bool | None = None):
+        """[B, *tile] -> (payload pytree of [B, ...] arrays, recon [B, *tile]).
+
+        ``recon`` must be the *decode program's own output* so the bound holds
+        by construction on what the decompressor reconstructs."""
+        raise NotImplementedError
+
+    def decode_tiles(self, payload, eb, *, tile: tuple[int, ...], order: str,
+                     levels: int):
+        """Payload pytree ([B, ...]) -> recon [B, *tile] float32."""
+        raise NotImplementedError
+
+    def lane_bytes(self, payload, i: int, backend: str) -> bytes:
+        """Serialize tile ``i`` of a host-side (numpy) payload to one lane."""
+        raise NotImplementedError
+
+    def parse_lane(self, blob: bytes, *, tile: tuple[int, ...], levels: int) -> dict:
+        """Inverse of :meth:`lane_bytes`: one lane -> unbatched payload dict."""
+        raise NotImplementedError
+
+
+@register_predictor
+class _LorenzoTiles(TilePredictor):
+    """Prequant + integer Lorenzo per tile (carry cut at tile boundaries).
+
+    Payload: ``{"codes": int32 [B, *tile]}``.  The transform is lossless on
+    the prequantized grid, so the tiled reconstruction is bit-identical to
+    the untiled ``predictor="lorenzo"`` path."""
+
+    name = "lorenzo"
+
+    def plan(self, tile, max_levels=5):
+        return 0
+
+    def encode_tiles(self, tiles, eb, *, order, levels, use_pallas=None):
+        from repro.kernels import ops
+        from repro.launch import sharding
+
+        codes = sharding.map_tiles(
+            lambda t: ops.lorenzo_quant_tiles_op(t, eb, use_pallas=use_pallas), tiles)
+        payload = {"codes": codes}
+        recon = self.decode_tiles(payload, eb, tile=tuple(tiles.shape[1:]),
+                                  order=order, levels=levels)
+        return payload, recon
+
+    def decode_tiles(self, payload, eb, *, tile, order, levels):
+        from repro.kernels import ops
+        from repro.launch import sharding
+
+        return sharding.map_tiles(
+            lambda c: ops.lorenzo_decode_tiles_op(c, eb), payload["codes"])
+
+    def lane_bytes(self, payload, i, backend):
+        from repro.sz import entropy
+
+        return entropy.encode_codes(payload["codes"][i], backend)
+
+    def parse_lane(self, blob, *, tile, levels):
+        from repro.sz import entropy
+
+        return {"codes": entropy.decode_codes(blob, tile)}
+
+
+# Interp lane layout (inside the GWTC container, docs/TILED_FORMAT.md):
+#   n_out u32 | zlen u32 | zlib(idx u32[n_out] + val f32[n_out]) | RPRE codes
+# Codes live on the per-tile *interp-padded* shape, derived from the
+# container's (tile, levels) as ``_padded_shape(tile, levels)``.
+_INTERP_LANE_HDR = struct.Struct("<II")
+
+
+# Fixed decode batch width.  The compiled program a float computation runs
+# through must not depend on how many tiles are being decoded: XLA fuses the
+# interp chains differently at different batch sizes (and unrolls trip-1
+# scans), which drifts ulps between a 1-tile region decode and an n-tile full
+# decode.  Padding every decode batch to this fixed width means ONE vmapped
+# executable serves every decode — same machine code per tile, so region and
+# full decode are bit-identical by construction.  (The Lorenzo decode needs
+# none of this: integer cumsum + one multiply cannot reassociate.)
+_INTERP_DECODE_CHUNK = 4
+
+
+@partial(jax.jit, static_argnames=("levels", "order"))
+def _interp_decode_chunk(codes, omask, ovals, eb, levels: int, order: str):
+    return jax.vmap(
+        lambda c, m, v: _interp_decode_padded(c, m, v, eb, levels, order)
+    )(codes, omask, ovals)
+
+
+def _interp_decode_tiles_padded(codes, omask, ovals, eb, levels: int, order: str):
+    """Chunked fixed-width decode of a [K, *pshape] payload (see
+    ``_INTERP_DECODE_CHUNK`` for why the width is pinned)."""
+    B = _INTERP_DECODE_CHUNK
+    K = codes.shape[0]
+    pad = (-K) % B
+    if pad:
+        ext = lambda a: jnp.concatenate([a, jnp.repeat(a[:1], pad, axis=0)])
+        codes, omask, ovals = ext(codes), ext(omask), ext(ovals)
+    out = [
+        _interp_decode_chunk(codes[i : i + B], omask[i : i + B],
+                             ovals[i : i + B], eb, levels, order)
+        for i in range(0, K + pad, B)
+    ]
+    recon = out[0] if len(out) == 1 else jnp.concatenate(out)
+    return recon[:K]
+
+
+@register_predictor
+class _InterpTiles(TilePredictor):
+    """SZ3-style multi-level interpolation, vmapped over the tile batch.
+
+    Payload: ``{"codes": int32, "omask": bool, "ovals": f32}`` on the
+    per-tile interp-padded grid ([B, *padded_tile]).  Each tile is an
+    independent prediction domain, so interp tiles decode standalone and the
+    random-access contract holds exactly like the Lorenzo path."""
+
+    name = "interp"
+
+    def plan(self, tile, max_levels=5):
+        return _num_levels(tile, max_levels)
+
+    def encode_tiles(self, tiles, eb, *, order, levels, use_pallas=None):
+        from repro.launch import sharding
+
+        tile = tuple(tiles.shape[1:])
+        pshape = _padded_shape(tile, levels)
+        pads = [(0, 0)] + [(0, p - d) for d, p in zip(tile, pshape)]
+        xp = jnp.pad(tiles, pads, mode="edge")
+
+        enc = jax.vmap(lambda t: _interp_encode_padded(t, eb, levels, order))
+        codes, omask, ovals, _ = sharding.map_tiles(enc, xp)
+
+        S = 1 << levels
+        coarse = jnp.zeros(pshape, bool).at[
+            tuple(slice(0, None, S) for _ in pshape)].set(True)
+        # Shared straggler promotion, batched over all tiles at once; the
+        # decode runs through the same fixed-width executable decompression
+        # uses, NOT a sharded full-batch program, so the recon contract holds.
+        omask, ovals, recon = _promote_stragglers(
+            xp, codes, omask, ovals, eb, coarse[None],
+            lambda c, m, v: _interp_decode_tiles_padded(c, m, v, eb, levels, order))
+        payload = {"codes": codes, "omask": omask, "ovals": ovals}
+        crop = (slice(None),) + tuple(slice(0, d) for d in tile)
+        return payload, recon[crop]
+
+    def decode_tiles(self, payload, eb, *, tile, order, levels):
+        # Deliberately NOT fanned through sharding.map_tiles: the decode must
+        # run through the one fixed-width executable (_INTERP_DECODE_CHUNK)
+        # on every call, or region and full decode would compile different
+        # programs and drift ulps apart.
+        recon = _interp_decode_tiles_padded(
+            payload["codes"], payload["omask"], payload["ovals"], eb, levels, order)
+        return recon[(slice(None),) + tuple(slice(0, d) for d in tile)]
+
+    def lane_bytes(self, payload, i, backend):
+        import zlib
+
+        from repro.sz import entropy
+
+        omask = payload["omask"][i]
+        idx = np.flatnonzero(omask.ravel()).astype(np.uint32)
+        val = payload["ovals"][i].ravel()[idx].astype(np.float32)
+        out = zlib.compress(idx.tobytes() + val.tobytes(), 6)
+        return (_INTERP_LANE_HDR.pack(idx.size, len(out)) + out
+                + entropy.encode_codes(payload["codes"][i], backend))
+
+    def parse_lane(self, blob, *, tile, levels):
+        import zlib
+
+        from repro.sz import entropy
+
+        pshape = _padded_shape(tile, levels)
+        n_out, zlen = _INTERP_LANE_HDR.unpack_from(blob, 0)
+        off = _INTERP_LANE_HDR.size
+        raw = zlib.decompress(blob[off : off + zlen])
+        idx = np.frombuffer(raw, np.uint32, n_out).astype(np.int64)
+        val = np.frombuffer(raw, np.float32, n_out, offset=4 * n_out)
+        n = int(np.prod(pshape))
+        omask = np.zeros(n, bool)
+        ovals = np.zeros(n, np.float32)
+        omask[idx] = True
+        ovals[idx] = val
+        return {
+            "codes": entropy.decode_codes(blob[off + zlen :], pshape),
+            "omask": omask.reshape(pshape),
+            "ovals": ovals.reshape(pshape),
+        }
+
+
+# Instantiate the registered classes (the decorator stored the class; replace
+# with a singleton instance so callers get bound methods).
+for _name, _cls in list(PREDICTORS.items()):
+    if isinstance(_cls, type):
+        PREDICTORS[_name] = _cls()
+del _name, _cls

@@ -21,10 +21,11 @@ from repro.sz.quantizer import resolve_eb
 
 _HDR = struct.Struct("<4sBBBBQ")  # magic, ndim, predictor, order, levels, eb bits as u64
 _MAGIC = b"SZJX"
-_PRED = {"lorenzo": 0, "interp": 1}
-_PRED_INV = {v: k for k, v in _PRED.items()}
-_ORD = {"linear": 0, "cubic": 1}
-_ORD_INV = {v: k for k, v in _ORD.items()}
+# Wire ids are shared with the GWTC container (canonical registry ids).
+_PRED = P.PRED_IDS
+_PRED_INV = P.PRED_NAMES
+_ORD = P.ORDER_IDS
+_ORD_INV = P.ORDER_NAMES
 
 
 @dataclass
@@ -208,21 +209,26 @@ class SZCompressor:
     def compress_tiled(
         self, x: jax.Array, tile=(64, 64, 64), *,
         rel_eb: float | None = None, abs_eb: float | None = None,
+        predictor: str | None = None,
         use_pallas: bool | None = None, workers: int | None = None,
     ):
-        """Tile-grid compress (independent entropy lanes, ``GWTC`` container
-        — docs/TILED_FORMAT.md).  Returns (TiledCompressed, reconstruction);
-        the artifact supports :meth:`decompress_region` without a full-volume
-        entropy decode.
+        """Tile-grid compress (independent entropy lanes, ``GWTC`` v2
+        container — docs/TILED_FORMAT.md).  Returns (TiledCompressed,
+        reconstruction); the artifact supports :meth:`decompress_region`
+        without a full-volume entropy decode.
 
-        The tile transform is ALWAYS prequant+Lorenzo — tiles must be exact,
-        independent domains, which the interpolation predictor's cross-level
-        coupling cannot provide.  ``self.predictor`` therefore applies only
-        to the monolithic :meth:`compress`; ``self.backend`` is honored."""
+        The per-tile transform dispatches through the predictor registry and
+        honors ``self.predictor``/``self.order``/``self.backend`` exactly
+        like the monolithic :meth:`compress` (each tile is an independent
+        prediction domain, so interp tiles decode standalone and region
+        decode stays bit-identical to the full decode's crop).  Pass
+        ``predictor=`` to override per call."""
         from repro.sz import tiled
 
         return tiled.compress_tiled(
             x, tile, rel_eb=rel_eb, abs_eb=abs_eb, backend=self.backend,
+            predictor=self.predictor if predictor is None else predictor,
+            order=self.order, max_levels=self.max_levels,
             use_pallas=use_pallas, workers=workers)
 
     def decompress_tiled(self, artifact, *, workers: int | None = None) -> jax.Array:

@@ -4,9 +4,11 @@ The monolithic SZ path materializes one volume end to end; this engine splits
 the (padded) volume into a fixed tile grid and makes every tile a fully
 independent compression domain:
 
-* prequant + integer Lorenzo runs as one batched pass over the tile batch
-  (``kernels.ops.lorenzo_quant_tiles_op``; the tile axis fans across the
-  device mesh via ``repro.launch.sharding.map_tiles``),
+* the per-tile prediction transform is *pluggable*: the tile batch dispatches
+  through the predictor registry (``repro.sz.predictor.get_predictor``) —
+  ``"lorenzo"`` (prequant + batched integer Lorenzo) or ``"interp"`` (SZ3-
+  style multi-level interpolation, vmapped per tile).  Batched passes fan
+  across the device mesh via ``repro.launch.sharding.map_tiles``,
 * each tile entropy-encodes as an independent lane on the chunked ``hc``/
   ``hZ`` codec (docs/ENTROPY_FORMAT.md), so lanes decode independently and
   in parallel,
@@ -14,37 +16,44 @@ independent compression domain:
   :func:`decompress_region` entropy-decodes *only* the tiles intersecting
   the requested ROI — partial reads never pay for the whole blob.
 
-Because the Lorenzo transform is lossless, the tiled reconstruction is
-bit-identical to the untiled ``predictor="lorenzo"`` reconstruction
-(``dequantize(prequantize(x))``); only the codes differ, and only on tile
-boundary planes where the prediction carry is cut.  Container layout is
-specified in docs/TILED_FORMAT.md.
+Every predictor's batched decode is elementwise-exact in the batch axis
+(each tile is an independent prediction domain), so region decode is
+bit-identical to the full decode's crop whichever predictor produced the
+artifact.  Container layout (``GWTC`` v2; v1 blobs still decode) is
+specified in docs/TILED_FORMAT.md; the layered stack is described in
+docs/ARCHITECTURE.md.
 """
 from __future__ import annotations
 
 import os
 import struct
+import threading
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops
-from repro.sz import entropy
-from repro.sz.predictor import lorenzo_decode
+from repro.sz.predictor import ORDER_IDS, ORDER_NAMES, PRED_IDS, PRED_NAMES, get_predictor
 from repro.sz.quantizer import resolve_eb
 
 _MAGIC = b"GWTC"
-_VERSION = 1
-_HDR = struct.Struct("<4sBBBBQQ")  # magic, version, ndim, backend, pad, eb bits, n_tiles
+_VERSION = 2
+# v1: magic, version, ndim, backend, pad, eb bits, n_tiles
+_HDR_V1 = struct.Struct("<4sBBBBQQ")
+# v2 adds the predictor layer: magic, version, ndim, backend, predictor,
+# order, levels, pad, eb bits, n_tiles
+_HDR_V2 = struct.Struct("<4sBBBBBBBQQ")
 _BACKENDS = {"zlib": 0, "huffman": 1, "huffman+zlib": 2}
 _BACKENDS_INV = {v: k for k, v in _BACKENDS.items()}
 
 # Observability for tests/benchmarks: how many lanes the last decode touched.
+# Written under _STATS_LOCK (concurrent decodes do not interleave partial
+# updates); :func:`decode_lanes` also *returns* the lane count, which is the
+# race-free way to consume it.
 DECODE_STATS = {"tiles_decoded": 0, "tiles_total": 0}
+_STATS_LOCK = threading.Lock()
 
 
 # ---------------------------------------------------------------------------
@@ -96,16 +105,22 @@ def stitch_tiles(tiles: jax.Array, grid: tuple[int, ...]) -> jax.Array:
 
 @dataclass
 class TiledCompressed:
-    """Self-describing tiled artifact (``GWTC``, docs/TILED_FORMAT.md).
+    """Self-describing tiled artifact (``GWTC`` v2, docs/TILED_FORMAT.md).
 
-    ``tile_blobs[i]`` is an independent, self-describing entropy lane
-    (``RPRE`` blob) for tile ``i`` in row-major grid order."""
+    ``tile_blobs[i]`` is an independent, self-describing lane for tile ``i``
+    in row-major grid order (predictor-specific layout; for ``lorenzo`` a
+    bare ``RPRE`` entropy blob, for ``interp`` outliers + ``RPRE`` codes).
+    ``predictor``/``order``/``levels`` record the per-tile transform; v1
+    blobs (always Lorenzo) still parse."""
 
     shape: tuple[int, ...]
     tile: tuple[int, ...]
     eb_abs: float
     backend: str
     tile_blobs: list[bytes]
+    predictor: str = "lorenzo"
+    order: str = "cubic"
+    levels: int = 0
     extras: dict = field(default_factory=dict)
     # serialization cache keyed on the extras fingerprint (same scheme as
     # SZCompressed): GWLZ.compress_tiled asks for nbytes before and after
@@ -133,7 +148,7 @@ class TiledCompressed:
         extras = sum(len(v) for v in self.extras.values())
         index = 8 * len(self.tile_blobs)
         return {"lanes": lanes, "index": index, "extras": extras,
-                "header": _HDR.size + 16 * len(self.shape), "total": self.nbytes}
+                "header": _HDR_V2.size + 16 * len(self.shape), "total": self.nbytes}
 
     def to_bytes(self) -> bytes:
         key = tuple(sorted(self.extras.items()))
@@ -145,8 +160,11 @@ class TiledCompressed:
 
     def _serialize(self) -> bytes:
         nd = len(self.shape)
-        hdr = _HDR.pack(_MAGIC, _VERSION, nd, _BACKENDS[self.backend], 0,
-                        np.float64(self.eb_abs).view(np.uint64), len(self.tile_blobs))
+        hdr = _HDR_V2.pack(_MAGIC, _VERSION, nd, _BACKENDS[self.backend],
+                           PRED_IDS[self.predictor], ORDER_IDS[self.order],
+                           self.levels, 0,
+                           np.float64(self.eb_abs).view(np.uint64),
+                           len(self.tile_blobs))
         dims = struct.pack(f"<{nd}q", *self.shape) + struct.pack(f"<{nd}q", *self.tile)
         index = np.asarray([len(b) for b in self.tile_blobs], np.uint64).tobytes()
         extras_items = sorted(self.extras.items())
@@ -158,10 +176,19 @@ class TiledCompressed:
 
     @staticmethod
     def from_bytes(blob: bytes) -> "TiledCompressed":
-        magic, ver, nd, backend, _pad, ebbits, n_tiles = _HDR.unpack_from(blob, 0)
+        magic, ver = struct.unpack_from("<4sB", blob, 0)
         assert magic == _MAGIC, "bad GWTC blob"
-        assert ver == _VERSION, f"unsupported GWTC version {ver}"
-        off = _HDR.size
+        if ver == 1:
+            # v1 predates the predictor layer: lanes are always Lorenzo codes.
+            _m, _v, nd, backend, _pad, ebbits, n_tiles = _HDR_V1.unpack_from(blob, 0)
+            pred, order, levels = PRED_IDS["lorenzo"], ORDER_IDS["cubic"], 0
+            off = _HDR_V1.size
+        elif ver == _VERSION:
+            (_m, _v, nd, backend, pred, order, levels, _pad, ebbits,
+             n_tiles) = _HDR_V2.unpack_from(blob, 0)
+            off = _HDR_V2.size
+        else:
+            raise AssertionError(f"unsupported GWTC version {ver}")
         shape = struct.unpack_from(f"<{nd}q", blob, off)
         off += 8 * nd
         tile = struct.unpack_from(f"<{nd}q", blob, off)
@@ -185,36 +212,31 @@ class TiledCompressed:
         return TiledCompressed(
             shape=tuple(shape), tile=tuple(tile),
             eb_abs=float(np.uint64(ebbits).view(np.float64)),
-            backend=_BACKENDS_INV[backend], tile_blobs=tile_blobs, extras=extras,
+            backend=_BACKENDS_INV[backend], tile_blobs=tile_blobs,
+            predictor=PRED_NAMES[pred], order=ORDER_NAMES[order],
+            levels=int(levels), extras=extras,
         )
 
 
 # ---------------------------------------------------------------------------
-# batched transform passes
+# lane dispatch (shared, size-capped executor)
 # ---------------------------------------------------------------------------
 
-
-@partial(jax.jit, static_argnames=("eb",))
-def _decode_tiles(codes: jax.Array, eb: float) -> jax.Array:
-    """[B, *tile] int32 codes -> float32 recon: vmap of the production
-    per-volume Lorenzo decode (exact integer cumsum + dequantize).
-
-    Elementwise-exact in the batch axis, so region decode and full decode
-    reconstruct bit-identically whatever subset of tiles they batch."""
-    return jax.vmap(lambda c: lorenzo_decode(c, eb, jnp.float32))(codes)
+_POOL_SIZE = max(1, min(os.cpu_count() or 1, 8))
+_LANE_POOL: ThreadPoolExecutor | None = None
+_LANE_POOL_LOCK = threading.Lock()
 
 
-def _encode_tiles_batched(tiles: jax.Array, eb: float, use_pallas: bool | None):
-    from repro.launch import sharding
-
-    fn = lambda t: ops.lorenzo_quant_tiles_op(t, eb, use_pallas=use_pallas)
-    return sharding.map_tiles(fn, tiles)
-
-
-def _decode_tiles_batched(codes: jax.Array, eb: float):
-    from repro.launch import sharding
-
-    return sharding.map_tiles(lambda c: _decode_tiles(c, eb), codes)
+def _lane_pool() -> ThreadPoolExecutor:
+    """One shared, size-capped executor for every encode/decode call — lane
+    work is short and bursty, so per-call pool construction was pure churn."""
+    global _LANE_POOL
+    if _LANE_POOL is None:
+        with _LANE_POOL_LOCK:
+            if _LANE_POOL is None:
+                _LANE_POOL = ThreadPoolExecutor(
+                    _POOL_SIZE, thread_name_prefix="gwtc-lane")
+    return _LANE_POOL
 
 
 def _lane_workers(n_lanes: int, workers: int | None) -> int:
@@ -225,11 +247,19 @@ def _lane_workers(n_lanes: int, workers: int | None) -> int:
 
 
 def _map_lanes(fn, items, workers: int | None):
+    """Run ``fn`` over lanes with at most ``workers`` concurrent lanes.
+
+    The per-call concurrency cap is enforced by splitting the lane list into
+    that many contiguous runs, each submitted as one serial task to the
+    shared pool — order is preserved and no call ever spawns its own pool."""
     w = _lane_workers(len(items), workers)
     if w <= 1:
         return [fn(it) for it in items]
-    with ThreadPoolExecutor(w) as ex:
-        return list(ex.map(fn, items))
+    bounds = np.linspace(0, len(items), w + 1).astype(int)
+    chunks = [items[a:b] for a, b in zip(bounds[:-1], bounds[1:]) if b > a]
+    futs = [_lane_pool().submit(lambda ch: [fn(it) for it in ch], ch)
+            for ch in chunks]
+    return [out for f in futs for out in f.result()]
 
 
 # ---------------------------------------------------------------------------
@@ -244,43 +274,63 @@ def compress_tiled(
     rel_eb: float | None = None,
     abs_eb: float | None = None,
     backend: str = "huffman+zlib",
+    predictor: str = "lorenzo",
+    order: str = "cubic",
+    max_levels: int = 5,
     use_pallas: bool | None = None,
     workers: int | None = None,
 ) -> tuple[TiledCompressed, jax.Array]:
     """Tile-grid compress; returns (artifact, reconstruction).
 
-    The reconstruction is the decode program's own output (batched integer
-    cumsum over the code tiles), cropped to ``x.shape`` — exactly what
-    :func:`decompress_tiled` will produce."""
+    ``predictor`` selects the per-tile transform from the registry
+    (``"lorenzo"`` or ``"interp"``; ``order``/``max_levels`` apply to interp
+    only).  The reconstruction is the decode program's own output, cropped to
+    ``x.shape`` — exactly what :func:`decompress_tiled` will produce."""
     if backend not in _BACKENDS:
         raise ValueError(f"unknown entropy backend {backend!r}")
+    pred = get_predictor(predictor)
     x = jnp.asarray(x, jnp.float32)
     tile = normalize_tile(tile, x.ndim)
     eb = resolve_eb(x, rel_eb, abs_eb)
+    levels = pred.plan(tile, max_levels)
     xp = pad_to_tiles(x, tile)
     tiles = split_tiles(xp, tile)
-    codes = _encode_tiles_batched(tiles, eb, use_pallas)
-    recon = stitch_tiles(_decode_tiles_batched(codes, eb), tile_grid(x.shape, tile))
+    payload, recon_tiles = pred.encode_tiles(
+        tiles, eb, order=order, levels=levels, use_pallas=use_pallas)
+    recon = stitch_tiles(recon_tiles, tile_grid(x.shape, tile))
 
-    codes_np = np.asarray(codes)
-    blobs = _map_lanes(lambda c: entropy.encode_codes(c, backend), list(codes_np), workers)
+    payload_np = jax.tree.map(np.asarray, payload)
+    blobs = _map_lanes(lambda i: pred.lane_bytes(payload_np, i, backend),
+                       list(range(tiles.shape[0])), workers)
     artifact = TiledCompressed(
-        shape=tuple(x.shape), tile=tile, eb_abs=eb, backend=backend, tile_blobs=blobs)
+        shape=tuple(x.shape), tile=tile, eb_abs=eb, backend=backend,
+        tile_blobs=blobs, predictor=predictor, order=order, levels=levels)
     return artifact, recon[tuple(slice(0, d) for d in x.shape)]
 
 
-def decode_lanes(artifact: TiledCompressed, lane_ids, *, workers: int | None = None) -> jax.Array:
-    """Entropy-decode the given lanes and reconstruct them: [len(ids), *tile].
+def decode_lanes(
+    artifact: TiledCompressed, lane_ids, *, workers: int | None = None
+) -> tuple[jax.Array, int]:
+    """Decode the given lanes and reconstruct them; returns
+    ``(recon [len(ids), *tile], lanes_decoded)``.
 
     Only the named lanes are touched — this is the random-access primitive
-    both :func:`decompress_tiled` and :func:`decompress_region` build on."""
+    both :func:`decompress_tiled` and :func:`decompress_region` build on.
+    The returned lane count is the race-free observability channel (the
+    module-level ``DECODE_STATS`` mirror is best-effort, for convenience)."""
+    pred = get_predictor(artifact.predictor)
     lane_ids = list(lane_ids)
     blobs = [artifact.tile_blobs[i] for i in lane_ids]
-    codes = _map_lanes(
-        lambda b: entropy.decode_codes(b, artifact.tile), blobs, workers)
-    DECODE_STATS["tiles_decoded"] = len(lane_ids)
-    DECODE_STATS["tiles_total"] = artifact.n_tiles
-    return _decode_tiles_batched(jnp.asarray(np.stack(codes)), artifact.eb_abs)
+    items = _map_lanes(
+        lambda b: pred.parse_lane(b, tile=artifact.tile, levels=artifact.levels),
+        blobs, workers)
+    with _STATS_LOCK:
+        DECODE_STATS["tiles_decoded"] = len(lane_ids)
+        DECODE_STATS["tiles_total"] = artifact.n_tiles
+    payload = {k: jnp.asarray(np.stack([it[k] for it in items])) for k in items[0]}
+    recon = pred.decode_tiles(payload, artifact.eb_abs, tile=artifact.tile,
+                              order=artifact.order, levels=artifact.levels)
+    return recon, len(lane_ids)
 
 
 def decompress_tiled(
@@ -291,7 +341,7 @@ def decompress_tiled(
     ``tile_transform([K, *tile]) -> [K, *tile]`` post-processes decoded tiles
     before stitching (the GWLZ pipeline enhances per tile through it; it must
     act per-tile so region and full decode stay consistent)."""
-    recon = decode_lanes(artifact, range(artifact.n_tiles), workers=workers)
+    recon, _ = decode_lanes(artifact, range(artifact.n_tiles), workers=workers)
     if tile_transform is not None:
         recon = tile_transform(recon)
     out = stitch_tiles(recon, artifact.grid)
@@ -340,7 +390,7 @@ def decompress_region(
     same values the full batch would (any ``tile_transform`` must preserve
     this by acting on each tile independently)."""
     ids, (bounds, ranges) = region_tiles(artifact, roi)
-    recon = decode_lanes(artifact, ids.tolist(), workers=workers)
+    recon, _ = decode_lanes(artifact, ids.tolist(), workers=workers)
     if tile_transform is not None:
         recon = tile_transform(recon)
     sub_grid = tuple(b - a for a, b in ranges)

@@ -26,10 +26,18 @@ def test_run_fast_smoke():
     assert any(n.startswith("throughput/entropy/hcz_decode") for n in names), names
     assert any(n.startswith("throughput/entropy/decode_speedup") for n in names), names
     assert any(n.startswith("throughput/compress/interp/huffman+zlib") for n in names), names
-    # the tiled-engine rows must be present (random-access decode anchor)
-    assert "throughput/tiled/compress" in names, names
-    tiled_rows = [l for l in lines[1:] if l.split(",")[0] == "throughput/tiled/region_decode"]
-    assert tiled_rows and "speedup_vs_full=" in tiled_rows[0], lines
+    # the tiled-engine rows must be present for BOTH registered predictors
+    # (random-access decode anchor; the tiled path is predictor-pluggable)
+    for pred in ("lorenzo", "interp"):
+        assert f"throughput/tiled/compress/{pred}" in names, names
+        tiled_rows = [l for l in lines[1:]
+                      if l.split(",")[0] == f"throughput/tiled/region_decode/{pred}"]
+        assert tiled_rows and "speedup_vs_full=" in tiled_rows[0], lines
+    # batched tile enhancement must report its measured speedup over the
+    # per-tile loop (bit-identity is asserted inside the benchmark itself)
+    enh_rows = [l for l in lines[1:]
+                if l.split(",")[0] == "throughput/tiled/enhance_batched"]
+    assert enh_rows and "speedup_vs_loop=" in enh_rows[0], lines
 
 
 def test_run_rejects_unknown_module():

@@ -53,11 +53,12 @@ def _abs_eb(x, reb):
 
 
 @settings(max_examples=30, deadline=None)
-@given(vt=volume_and_tile(), reb=st.sampled_from([1e-2, 1e-3, 1e-4]))
-def test_tiled_roundtrip_error_bounded(vt, reb):
+@given(vt=volume_and_tile(), reb=st.sampled_from([1e-2, 1e-3, 1e-4]),
+       pred=st.sampled_from(["lorenzo", "interp"]))
+def test_tiled_roundtrip_error_bounded(vt, reb, pred):
     shape, tile, seed = vt
     x = _field(shape, seed)
-    art, recon = tiled.compress_tiled(x, tile, abs_eb=_abs_eb(x, reb))
+    art, recon = tiled.compress_tiled(x, tile, abs_eb=_abs_eb(x, reb), predictor=pred)
     full = tiled.decompress_tiled(tiled.TiledCompressed.from_bytes(art.to_bytes()))
     assert full.shape == x.shape
     assert float(jnp.max(jnp.abs(full - x))) <= art.eb_abs * (1 + 1e-5)
@@ -66,11 +67,12 @@ def test_tiled_roundtrip_error_bounded(vt, reb):
 
 
 @settings(max_examples=30, deadline=None)
-@given(data=st.data(), vt=volume_and_tile())
-def test_region_decode_matches_full_crop(data, vt):
+@given(data=st.data(), vt=volume_and_tile(),
+       pred=st.sampled_from(["lorenzo", "interp"]))
+def test_region_decode_matches_full_crop(data, vt, pred):
     shape, tile, seed = vt
     x = _field(shape, seed)
-    art, _ = tiled.compress_tiled(x, tile, abs_eb=_abs_eb(x, 1e-3))
+    art, _ = tiled.compress_tiled(x, tile, abs_eb=_abs_eb(x, 1e-3), predictor=pred)
     full = np.asarray(tiled.decompress_tiled(art))
     roi = data.draw(roi_for(shape))
     reg = tiled.decompress_region(art, roi)
