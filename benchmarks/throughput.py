@@ -18,10 +18,10 @@ from benchmarks.common import (
     emit,
     timed,
 )
+from repro import api
 from repro.core import enhancer as E
 from repro.data import nyx_like_field
 from repro.kernels import ops
-from repro.sz import SZCompressor
 from repro.sz.entropy import decode_codes, encode_codes, encode_codes_legacy
 
 BACKENDS = ("zlib", "huffman", "huffman+zlib")
@@ -48,8 +48,9 @@ def _entropy_stage_bench() -> None:
 
 
 def _tiled_bench() -> None:
-    """Tiled engine: compress, full decode, and single-tile region decode,
-    per registered predictor (the tiled path dispatches any of them).
+    """Tiled engine THROUGH THE FAÇADE (`api.compress` + handle slicing):
+    compress, full decode, and single-tile region decode per registered
+    predictor — the benchmarked hot path is the public path.
 
     The region row reports the speedup over full decode — random-access
     reads must only pay for intersecting entropy lanes (target >= 4x at the
@@ -59,20 +60,23 @@ def _tiled_bench() -> None:
     x = jnp.asarray(nyx_like_field(TILED_VOLUME, "temperature", seed=7))
     nbytes = x.size * 4
     for pred in ("lorenzo", "interp"):
-        comp = SZCompressor(predictor=pred)
-        (art, _recon), us = timed(
-            lambda: comp.compress_tiled(x, TILED_TILE, rel_eb=1e-3), repeats=1)
+        vol, us = timed(
+            lambda: api.compress(x, eb=1e-3, tiled=True, tile=TILED_TILE,
+                                 predictor=pred), repeats=1)
+        art = vol.artifact
         emit(f"throughput/tiled/compress/{pred}", us,
-             f"MBps={nbytes/us:.1f};cr={nbytes/art.nbytes:.1f};tiles={art.n_tiles}")
+             f"MBps={nbytes/us:.1f};cr={nbytes/vol.nbytes:.1f};tiles={art.n_tiles}")
 
-        full, us_full = timed(lambda: tiled.decompress_tiled(art), repeats=3)
+        # fresh handle per call: full decode is cached once per volume
+        full, us_full = timed(
+            lambda: np.asarray(api.CompressedVolume(art)), repeats=3)
         emit(f"throughput/tiled/decompress_full/{pred}", us_full,
              f"MBps={nbytes/us_full:.1f}")
 
         roi = tuple(slice(0, t) for t in art.tile)  # exactly one tile
-        reg, us_reg = timed(lambda: tiled.decompress_region(art, roi), repeats=3)
-        assert np.array_equal(np.asarray(reg), np.asarray(full)[roi]), \
-            "region decode must equal the full decode's crop"
+        reg, us_reg = timed(lambda: vol[roi], repeats=3)
+        assert np.array_equal(reg, full[roi]), \
+            "façade slicing must equal the full decode's crop"
         lanes = tiled.DECODE_STATS["tiles_decoded"]
         emit(f"throughput/tiled/region_decode/{pred}", us_reg,
              f"MBps={reg.size*4/us_reg:.1f};speedup_vs_full={us_full/us_reg:.1f}x;"
@@ -113,11 +117,14 @@ def main() -> None:
 
     for pred in ("lorenzo", "interp"):
         for backend in BACKENDS:
-            comp = SZCompressor(predictor=pred, backend=backend)
-            (art, recon), us = timed(lambda: comp.compress(x, rel_eb=1e-3), repeats=2)
+            # monolithic rows go through the façade too (public == hot path)
+            vol, us = timed(
+                lambda: api.compress(x, eb=1e-3, predictor=pred, backend=backend),
+                repeats=2)
+            art = vol.artifact
             emit(f"throughput/compress/{pred}/{backend}", us,
-                 f"MBps={nbytes/us:.1f};cr={nbytes/art.nbytes:.1f}")
-            _, us = timed(lambda: comp.decompress(art), repeats=2)
+                 f"MBps={nbytes/us:.1f};cr={nbytes/vol.nbytes:.1f}")
+            _, us = timed(lambda: np.asarray(api.CompressedVolume(art)), repeats=2)
             emit(f"throughput/decompress/{pred}/{backend}", us, f"MBps={nbytes/us:.1f}")
             # per-stage: entropy decode alone (the former Python-loop bottleneck)
             shape = art.padded_shape if pred == "interp" else art.shape

@@ -4,6 +4,7 @@
         --reb 1e-3 --groups 8 --out /tmp/field.gwlz [--plot-stats]
 """
 import argparse
+import os
 import sys
 
 sys.path.insert(0, "src")
@@ -11,9 +12,9 @@ sys.path.insert(0, "src")
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import GWLZ, GWLZTrainConfig, grouping
+from repro import api
+from repro.core import GWLZTrainConfig, grouping
 from repro.data import NYX_FIELDS, field_stats, nyx_like_field
-from repro.sz.szjax import SZCompressed
 
 
 def text_hist(vals, bins=30, width=40):
@@ -41,7 +42,8 @@ def main():
     print(f"field={args.field} stats={field_stats(np.asarray(x))}")
 
     cfg = GWLZTrainConfig(n_groups=args.groups, epochs=args.epochs, min_group_pixels=256)
-    artifact, stats = GWLZ(train_cfg=cfg).compress(x, rel_eb=args.reb)
+    vol = api.compress(x, eb=args.reb, enhance=cfg)
+    artifact, stats = vol.artifact, vol.stats
     print(f"PSNR {stats.psnr_sz:.2f} -> {stats.psnr_gwlz:.2f} dB; overhead {stats.overhead:.4f}x")
 
     if args.plot_stats:
@@ -49,7 +51,7 @@ def main():
         from repro.sz import decompress
 
         model = deserialize_model(artifact.extras["gwlz"])
-        recon = decompress(artifact)
+        recon = decompress(artifact)  # raw SZ recon (pre-enhancement)
         ids = grouping.assign_groups(recon, model.edges)
         st = grouping.group_stats(recon, ids, args.groups)
         resid = np.asarray(x - recon)
@@ -64,13 +66,17 @@ def main():
         print("\nresidual distribution (Fig. 4b analogue):")
         print(text_hist(resid.ravel()[:: max(resid.size // 20000, 1)]))
 
-    with open(args.out, "wb") as f:
-        f.write(artifact.to_bytes())
-    print(f"\nwrote {args.out}; verifying ...")
-    art2 = SZCompressed.from_bytes(open(args.out, "rb").read())
-    out = GWLZ().decompress(art2)
+    # the façade's save writes the self-describing container verbatim, so the
+    # enhancer model rides along and bytes-on-disk == vol.nbytes exactly
+    written = api.save(args.out, vol)
+    on_disk = os.path.getsize(args.out)
+    assert written == on_disk == vol.nbytes, (written, on_disk, vol.nbytes)
+    print(f"\nwrote {args.out} ({on_disk} bytes == vol.nbytes); verifying ...")
+    vol2 = api.open(args.out)
+    assert vol2.enhanced, "attached enhancer must survive the round trip"
+    out = jnp.asarray(np.asarray(vol2))
     err = float(jnp.max(jnp.abs(out - x)))
-    print(f"max|err|={err:.4g} (eb={artifact.eb_abs:.4g})")
+    print(f"max|err|={err:.4g} (eb={vol2.eb_abs:.4g})")
 
 
 if __name__ == "__main__":

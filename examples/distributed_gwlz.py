@@ -15,18 +15,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core import grouping, metrics
 from repro.data import nyx_like_field
 from repro.launch.gwlz_dist import DistGWLZConfig, build_state, make_dist_train_step
 from repro.launch.mesh import make_host_mesh
-from repro.sz import compress
 
 
 def main():
     mesh = make_host_mesh()
     cfg = DistGWLZConfig(n_groups=4, volume=32, batch_slices=8, grad_compress=True)
     x = jnp.asarray(nyx_like_field((32, 32, 32), "temperature", seed=1))
-    art, recon = compress(x, rel_eb=5e-3, backend="zlib")
+    vol = api.compress(x, eb=5e-3, backend="zlib")
+    recon = jnp.asarray(np.asarray(vol))  # decompressor-visible reconstruction
     resid = x - recon
 
     edges = grouping.compute_edges(recon, cfg.n_groups, "quantile")

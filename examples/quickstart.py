@@ -1,50 +1,53 @@
-"""Quickstart: GWLZ end-to-end on a synthetic Nyx-like field.
+"""Quickstart: GWLZ end-to-end through the `repro.api` front door.
 
     PYTHONPATH=src python examples/quickstart.py
 
 Compresses the Temperature field with SZ3-class compression at REB 5e-3,
-trains 8 group-wise enhancers, attaches them to the stream, round-trips
-through bytes, and reports the paper's metrics (Table 2 row analogue).
-Finishes with the tiled path at both registered predictors — the same
-interp-vs-lorenzo choice applies to tile-grid compression with
-random-access region decode (see examples/tiled_region_decode.py).
+trains 8 group-wise enhancers (attached to the stream), persists through
+``api.save``/``api.open`` (the envelope is self-sniffing), and reports the
+paper's metrics (Table 2 row analogue).  Finishes with the tiled path —
+the SAME handle interface, but numpy-style slicing decodes only the
+entropy lanes intersecting the request (docs/API.md).
 """
 import sys
+import tempfile
 
 sys.path.insert(0, "src")
 
-import jax.numpy as jnp
+import numpy as np
 
-from repro.core import GWLZ, GWLZTrainConfig, metrics
+from repro import api
+from repro.core import GWLZTrainConfig, metrics
 from repro.data import nyx_like_field
-from repro.sz import SZCompressor
-from repro.sz.szjax import SZCompressed
 
 
 def main():
-    x = jnp.asarray(nyx_like_field((48, 48, 48), "temperature", seed=1))
+    x = np.asarray(nyx_like_field((48, 48, 48), "temperature", seed=1))
     cfg = GWLZTrainConfig(n_groups=8, epochs=80, batch_size=10, min_group_pixels=256)
-    gwlz = GWLZ(train_cfg=cfg)
 
     print("compressing + training enhancers ...")
-    artifact, stats = gwlz.compress(x, rel_eb=5e-3)
+    vol = api.compress(x, eb=5e-3, enhance=cfg)
+    stats = vol.stats
     print(f"  PSNR  SZ3-only : {stats.psnr_sz:6.2f} dB")
     print(f"  PSNR  GWLZ     : {stats.psnr_gwlz:6.2f} dB  (+{stats.psnr_gwlz-stats.psnr_sz:.2f})")
     print(f"  CR    SZ3-only : {stats.cr_sz:8.1f}x")
     print(f"  CR    GWLZ     : {stats.cr_gwlz:8.1f}x  (overhead {stats.overhead:.4f}x)")
     print(f"  enhancer params: {stats.n_model_params} across {cfg.n_groups} groups")
 
-    blob = artifact.to_bytes()
-    print(f"stream size: {len(blob):,} bytes; decompressing from bytes ...")
-    out = gwlz.decompress(SZCompressed.from_bytes(blob))
+    with tempfile.NamedTemporaryFile(suffix=".gwlz") as f:
+        written = api.save(f.name, vol)
+        print(f"stream size: {written:,} bytes on disk (== vol.nbytes); reopening ...")
+        out = np.asarray(api.open(f.name))  # sniffs SZJX, applies the enhancer
     print(f"  round-trip PSNR: {float(metrics.psnr(x, out)):6.2f} dB")
-    print(f"  max |err| / eb : {float(metrics.max_abs_err(x, out)) / artifact.eb_abs:.3f}")
+    print(f"  max |err| / eb : {float(metrics.max_abs_err(x, out)) / vol.eb_abs:.3f}")
 
-    print("tiled path (GWTC v2, predictor-pluggable) ...")
+    print("tiled path (GWTC, random-access slicing through the same handle) ...")
     for pred in ("lorenzo", "interp"):
-        art, _ = SZCompressor(predictor=pred).compress_tiled(x, (16, 16, 16), rel_eb=5e-3)
-        print(f"  predictor={pred:8s}: cr {x.nbytes / art.nbytes:6.1f}x "
-              f"over {art.n_tiles} independently decodable tiles")
+        tv = api.compress(x, eb=5e-3, tiled=True, tile=(16, 16, 16), predictor=pred)
+        roi = tv[0:16, 16:32, 0:16]  # decodes 1 of 27 entropy lanes
+        lanes, total = api.region_lane_count(tv, (slice(0, 16), slice(16, 32), slice(0, 16)))
+        print(f"  predictor={pred:8s}: cr {x.nbytes / tv.nbytes:6.1f}x; "
+              f"vol[0:16,16:32,0:16] -> {roi.shape} from {lanes}/{total} lanes")
 
 
 if __name__ == "__main__":

@@ -1,17 +1,20 @@
-"""Tiled compression with random-access region decode (GWTC container).
+"""Tiled compression with random-access region decode, through `repro.api`.
 
 Compresses a Nyx-like field over a tile grid with a selectable per-tile
 predictor (the tiled path dispatches any registered predictor — interp
 usually compresses smooth fields tighter, lorenzo is cheaper), optionally
-trains group-wise enhancers over the grid, then decodes a sub-region
-touching only the intersecting entropy lanes — the partial-read path for
-Nyx-scale fields.
+trains group-wise enhancers over the grid, persists via ``api.save``, then
+reopens and slices the handle: ``vol[roi]`` decodes only the intersecting
+entropy lanes — the partial-read path for Nyx-scale fields.  The enhancer
+(when attached) is applied per decoded tile, so the slice is bit-identical
+to the full decode's crop.
 
     PYTHONPATH=src python examples/tiled_region_decode.py --size 64 --tile 32 \
         [--predictor interp|lorenzo] [--gwlz --groups 4 --epochs 20]
 """
 import argparse
 import sys
+import tempfile
 import time
 
 sys.path.insert(0, "src")
@@ -19,9 +22,10 @@ sys.path.insert(0, "src")
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import GWLZ, GWLZTrainConfig
+from repro import api
+from repro.core import GWLZTrainConfig
 from repro.data import NYX_FIELDS, nyx_like_field
-from repro.sz import SZCompressor, tiled
+from repro.sz import tiled
 
 
 def main():
@@ -38,47 +42,45 @@ def main():
     args = ap.parse_args()
 
     x = jnp.asarray(nyx_like_field((args.size,) * 3, args.field, seed=1))
-    tile = (args.tile,) * 3
+    enhance = (GWLZTrainConfig(n_groups=args.groups, epochs=args.epochs,
+                               min_group_pixels=256)
+               if args.gwlz else False)
 
-    if args.gwlz:
-        cfg = GWLZTrainConfig(n_groups=args.groups, epochs=args.epochs,
-                              min_group_pixels=256)
-        gw = GWLZ(train_cfg=cfg)
-        artifact, stats = gw.compress_tiled(x, tile, rel_eb=args.reb,
-                                            predictor=args.predictor)
-        print(f"GWLZ tiled [{artifact.predictor}]: PSNR {stats.psnr_sz:.2f} -> "
-              f"{stats.psnr_gwlz:.2f} dB, overhead {stats.overhead:.4f}x")
-        decompress_full = lambda a: gw.decompress_tiled(a)
-        decompress_roi = lambda a, roi: gw.decompress_region(a, roi)
+    vol = api.compress(x, eb=args.reb, tiled=True, tile=(args.tile,) * 3,
+                       predictor=args.predictor, enhance=enhance)
+    if vol.stats is not None:
+        print(f"GWLZ tiled [{args.predictor}]: PSNR {vol.stats.psnr_sz:.2f} -> "
+              f"{vol.stats.psnr_gwlz:.2f} dB, overhead {vol.stats.overhead:.4f}x")
     else:
-        comp = SZCompressor(predictor=args.predictor)
-        artifact, recon = comp.compress_tiled(x, tile, rel_eb=args.reb)
-        err = float(jnp.max(jnp.abs(recon - x)))
-        print(f"SZ tiled [{artifact.predictor}]: max|err|={err:.4g} "
-              f"(eb={artifact.eb_abs:.4g})")
-        decompress_full = comp.decompress_tiled
-        decompress_roi = comp.decompress_region
+        err = float(jnp.max(jnp.abs(jnp.asarray(np.asarray(vol)) - x)))
+        print(f"SZ tiled [{args.predictor}]: max|err|={err:.4g} (eb={vol.eb_abs:.4g})")
 
-    blob = artifact.to_bytes()
-    rep = artifact.size_report()
-    print(f"container: {len(blob)} bytes over {artifact.n_tiles} lanes "
-          f"(grid {artifact.grid}, cr {x.nbytes / len(blob):.1f}x, "
+    art = vol.artifact
+    rep = vol.size_report()
+    print(f"container: {vol.nbytes} bytes over {art.n_tiles} lanes "
+          f"(grid {art.grid}, cr {x.nbytes / vol.nbytes:.1f}x, "
           f"index {rep['index']} B)")
 
-    art2 = tiled.TiledCompressed.from_bytes(blob)
     half = args.size // 2
     roi = (slice(0, half), slice(half, args.size), slice(0, half))
-    decompress_full(art2), decompress_roi(art2, roi)  # warm the jit caches
+    with tempfile.NamedTemporaryFile(suffix=".gwtc") as f:
+        api.save(f.name, vol)
+        vol2 = api.open(f.name)  # self-sniffing reopen; enhancer rides along
 
-    t0 = time.perf_counter()
-    full = decompress_full(art2)
-    t_full = time.perf_counter() - t0
+        np.asarray(api.CompressedVolume(vol2.artifact)), vol2[roi]  # warm jit caches
 
-    t0 = time.perf_counter()
-    region = decompress_roi(art2, roi)
-    t_reg = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        # fresh handle over the parsed artifact: uncached full decode, and the
+        # same parse-free footing as the region timing below
+        full = np.asarray(api.CompressedVolume(vol2.artifact))
+        t_full = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        region = vol2[roi]  # tiled slicing never uses the full-decode cache
+        t_reg = time.perf_counter() - t0
+
     st = tiled.DECODE_STATS
-    np.testing.assert_array_equal(np.asarray(region), np.asarray(full)[roi])
+    np.testing.assert_array_equal(region, full[roi])
 
     print(f"full decode:   {t_full*1e3:7.1f} ms ({st['tiles_total']} lanes)")
     print(f"region decode: {t_reg*1e3:7.1f} ms ({st['tiles_decoded']}/"

@@ -1,0 +1,437 @@
+"""One front door for the compression stack.
+
+Callers get a scenario-independent surface — container choice (monolithic
+``SZJX`` vs tiled ``GWTC``), enhancer attachment, and random-access decode
+all hide behind a numpy-like handle:
+
+    from repro import api
+
+    vol = api.compress(x, eb=1e-3, tiled=True, enhance=True)  # CompressedVolume
+    api.save("field.gwlz", vol)
+
+    vol = api.open("field.gwlz")          # sniffs the magic, picks the decoder
+    full = np.asarray(vol)                # full decode (cached once)
+    roi  = vol[8:40, :, 16:32]            # lazy slice; tiled artifacts decode
+                                          # only the intersecting entropy lanes
+
+Multi-field datasets persist as one ``GWDS`` envelope (named fields sharing
+an offset index — docs/DATASET_FORMAT.md):
+
+    api.save("snapshot.gwds", {"temperature": vol_t, "baryon_density": vol_b})
+    ds = api.open("snapshot.gwds")
+    ds["temperature"][0:16, :, :]
+
+Reference: docs/API.md.  The shell surface is ``python -m repro.cli``.
+"""
+from __future__ import annotations
+
+import os
+import struct
+from collections.abc import Iterator, Mapping
+
+import numpy as np
+
+from repro.core.pipeline import GWLZ, GWLZStats
+from repro.core.trainer import GWLZTrainConfig
+from repro.sz import artifact as A
+from repro.sz.szjax import SZCompressor
+from repro.sz.tiled import TiledCompressed, region_tiles
+
+__all__ = [
+    "CompressedVolume",
+    "Dataset",
+    "compress",
+    "open",
+    "save",
+    "from_bytes",
+    "GWDS_MAGIC",
+]
+
+_builtin_open = open  # shadowed below by the façade's open()
+
+GWDS_MAGIC = b"GWDS"
+_GWDS_VERSION = 1
+# magic, version, pad x3, n_fields
+_GWDS_HDR = struct.Struct("<4sB3xI")
+# per-field index entry tail (after the name): absolute offset, length
+_GWDS_ENTRY = struct.Struct("<QQ")
+
+
+# ---------------------------------------------------------------------------
+# the handle
+# ---------------------------------------------------------------------------
+
+
+class CompressedVolume:
+    """Lazy numpy-like handle over a compressed artifact.
+
+    Wraps either container behind one interface: ``shape``/``dtype``/
+    ``nbytes``/``stats``/``size_report()``, ``np.asarray(vol)`` for the full
+    decode, and numpy-style slicing.  Slicing routes to the random-access
+    region decoder on tiled artifacts (only intersecting entropy lanes are
+    touched; an attached GWLZ enhancer runs per decoded tile) and to
+    crop-after-decode on monolithic ones, where the full decode is computed
+    once and cached.  Region and full decode are bit-identical by the
+    stack's construction, so the same consumer code works on either
+    container.
+    """
+
+    def __init__(self, artifact: A.Artifact, *, stats: GWLZStats | None = None,
+                 pipeline: GWLZ | None = None):
+        self.artifact = artifact
+        self.stats = stats
+        self.pipeline = pipeline or GWLZ()
+        self._cache: np.ndarray | None = None  # one-shot full-decode cache
+
+    # -- metadata ----------------------------------------------------------
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(self.artifact.shape)
+
+    @property
+    def dtype(self) -> np.dtype:
+        return np.dtype(np.float32)
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape))
+
+    @property
+    def nbytes(self) -> int:
+        """Compressed size — what :func:`save` writes to disk."""
+        return self.artifact.nbytes
+
+    @property
+    def eb_abs(self) -> float:
+        return float(self.artifact.eb_abs)
+
+    @property
+    def tiled(self) -> bool:
+        return isinstance(self.artifact, TiledCompressed)
+
+    @property
+    def enhanced(self) -> bool:
+        """True when a trained GWLZ enhancer model rides in the artifact."""
+        return "gwlz" in self.artifact.extras
+
+    def size_report(self) -> dict:
+        return self.artifact.size_report()
+
+    def to_bytes(self) -> bytes:
+        return self.artifact.to_bytes()
+
+    def __repr__(self) -> str:
+        kind = "GWTC tiled" if self.tiled else "SZJX"
+        enh = "+gwlz" if self.enhanced else ""
+        return (f"CompressedVolume({kind}{enh}, shape={self.shape}, "
+                f"eb_abs={self.eb_abs:.4g}, nbytes={self.nbytes})")
+
+    # -- decode ------------------------------------------------------------
+
+    def decode(self) -> np.ndarray:
+        """Full decode (enhancer applied when attached), cached once.
+
+        The returned array is marked read-only: it IS the cache (and
+        monolithic slicing returns views of it), so caller mutation would
+        otherwise corrupt every later decode from this handle.  Copy to
+        mutate."""
+        if self._cache is None:
+            self._cache = np.asarray(self.pipeline.decode(self.artifact))
+            self._cache.setflags(write=False)
+        return self._cache
+
+    def __array__(self, dtype=None, copy=None) -> np.ndarray:
+        arr = self.decode()
+        if dtype is not None and np.dtype(dtype) != arr.dtype:
+            return arr.astype(dtype)
+        if copy:
+            return arr.copy()
+        return arr
+
+    def __getitem__(self, key) -> np.ndarray:
+        """Numpy-style slicing (ints, slices with any positive step,
+        Ellipsis; missing trailing axes are full slices).
+
+        Tiled artifacts ALWAYS route through the region decoder — partial
+        reads never pay for non-intersecting lanes (and never populate the
+        full-decode cache); monolithic artifacts crop the cached full
+        decode."""
+        specs = self._normalize_key(key)
+        out_empty = any(hi <= lo for lo, hi, _step, _sq in specs)
+        if out_empty:
+            shape = tuple(_strided_len(lo, hi, step)
+                          for lo, hi, step, sq in specs if not sq)
+            return np.empty(shape, np.float32)
+        if self.tiled:
+            roi = tuple(slice(lo, hi) for lo, hi, _s, _q in specs)
+            block = np.asarray(self.pipeline.decode(self.artifact, roi))
+            origin = [lo for lo, _h, _s, _q in specs]
+        else:
+            block = self.decode()
+            origin = [0] * self.ndim
+        crop = tuple(
+            lo - o if sq else slice(lo - o, hi - o, step)
+            for (lo, hi, step, sq), o in zip(specs, origin))
+        out = block[crop]
+        # container-independent contract: tiled slices are fresh writable
+        # arrays, so monolithic crops (views of the read-only cache) copy
+        return out if out.flags.writeable else out.copy()
+
+    def _normalize_key(self, key) -> list[tuple[int, int, int, bool]]:
+        """key -> per-dim (lo, hi, step, squeeze) with 0 <= lo,hi <= dim."""
+        if not isinstance(key, tuple):
+            key = (key,)
+        if any(k is Ellipsis for k in key):
+            i = key.index(Ellipsis)
+            if any(k is Ellipsis for k in key[i + 1:]):
+                raise IndexError("an index can only have a single ellipsis")
+            fill = self.ndim - (len(key) - 1)
+            key = key[:i] + (slice(None),) * fill + key[i + 1:]
+        if len(key) > self.ndim:
+            raise IndexError(
+                f"too many indices for a {self.ndim}-d compressed volume")
+        key = key + (slice(None),) * (self.ndim - len(key))
+        specs = []
+        for k, d in zip(key, self.shape):
+            if isinstance(k, (int, np.integer)):
+                i = int(k) + d if k < 0 else int(k)
+                if not 0 <= i < d:
+                    raise IndexError(f"index {int(k)} out of bounds for dim of size {d}")
+                specs.append((i, i + 1, 1, True))
+            elif isinstance(k, slice):
+                start, stop, step = k.indices(d)
+                if step < 1:
+                    raise IndexError(
+                        "negative-step slicing is not supported on a "
+                        "CompressedVolume; decode with np.asarray() first")
+                specs.append((start, max(start, stop), step, False))
+            else:
+                raise IndexError(
+                    f"unsupported index {k!r}; use ints, slices, or Ellipsis")
+        return specs
+
+
+def _strided_len(lo: int, hi: int, step: int) -> int:
+    return max(0, -(-(hi - lo) // step))
+
+
+# ---------------------------------------------------------------------------
+# compress
+# ---------------------------------------------------------------------------
+
+
+def compress(
+    x,
+    *,
+    eb: float | None = None,
+    abs_eb: float | None = None,
+    tiled: bool = False,
+    tile=(64, 64, 64),
+    enhance: bool | GWLZTrainConfig = False,
+    predictor: str = "interp",
+    order: str = "cubic",
+    backend: str = "huffman+zlib",
+    max_levels: int = 5,
+    clamp_to_bound: bool = False,
+    callback=None,
+) -> CompressedVolume:
+    """Compress ``x`` into a :class:`CompressedVolume` handle.
+
+    ``eb`` is the *relative* error bound (scaled by the value range);
+    ``abs_eb`` is absolute — pass exactly one.  ``tiled=True`` selects the
+    random-access ``GWTC`` container over the tile grid ``tile``;
+    ``predictor``/``order``/``backend`` configure the transform and entropy
+    stages on either path.  ``enhance`` trains group-wise GWLZ enhancers and
+    attaches them to the artifact: ``True`` uses the default
+    :class:`GWLZTrainConfig`, or pass a config instance; the handle's
+    ``stats`` then carries the paper's metrics (PSNR/CR/overhead)."""
+    sz = SZCompressor(predictor, order, backend, max_levels)
+    if not enhance:
+        if tiled:
+            artifact, _recon = sz.compress_tiled(x, tile, rel_eb=eb, abs_eb=abs_eb)
+        else:
+            artifact, _recon = sz.compress(x, rel_eb=eb, abs_eb=abs_eb)
+        return CompressedVolume(
+            artifact, pipeline=GWLZ(sz=sz, clamp_to_bound=clamp_to_bound))
+    cfg = enhance if isinstance(enhance, GWLZTrainConfig) else GWLZTrainConfig()
+    gw = GWLZ(sz=sz, train_cfg=cfg, clamp_to_bound=clamp_to_bound)
+    return gw.compress_volume(
+        x, tiled=tiled, tile=tile, rel_eb=eb, abs_eb=abs_eb, callback=callback)
+
+
+# ---------------------------------------------------------------------------
+# multi-field dataset (GWDS)
+# ---------------------------------------------------------------------------
+
+
+class Dataset(Mapping):
+    """Lazy mapping of field name -> :class:`CompressedVolume` backed by one
+    ``GWDS`` envelope (docs/DATASET_FORMAT.md).
+
+    Field blobs parse on first access — opening a dataset reads the shared
+    offset index only, so touching one field of a many-field snapshot never
+    pays for the others."""
+
+    def __init__(self, blob: bytes, index: dict[str, tuple[int, int]],
+                 *, pipeline: GWLZ | None = None):
+        self._blob = blob
+        self._index = index
+        self._pipeline = pipeline
+        self._cache: dict[str, CompressedVolume] = {}
+
+    @staticmethod
+    def from_bytes(blob: bytes, *, pipeline: GWLZ | None = None) -> "Dataset":
+        try:
+            magic, ver, n_fields = _GWDS_HDR.unpack_from(blob, 0)
+            if magic != GWDS_MAGIC:
+                raise ValueError(f"bad GWDS blob (magic {magic!r})")
+            if ver != _GWDS_VERSION:
+                raise ValueError(f"unsupported GWDS version {ver}")
+            off = _GWDS_HDR.size
+            index: dict[str, tuple[int, int]] = {}
+            for _ in range(n_fields):
+                (nlen,) = struct.unpack_from("<I", blob, off)
+                off += 4
+                name = blob[off : off + nlen].decode()
+                off += nlen
+                fo, fl = _GWDS_ENTRY.unpack_from(blob, off)
+                off += _GWDS_ENTRY.size
+                if fo + fl > len(blob):
+                    raise ValueError(
+                        f"GWDS field {name!r} extends past the blob "
+                        f"({fo}+{fl} > {len(blob)}): truncated file?")
+                index[name] = (int(fo), int(fl))
+        except struct.error as e:
+            raise ValueError(f"truncated or corrupt GWDS envelope: {e}") from e
+        return Dataset(blob, index, pipeline=pipeline)
+
+    @staticmethod
+    def build(fields: Mapping[str, "CompressedVolume | A.Artifact"]) -> bytes:
+        """Serialize named artifacts into one GWDS envelope."""
+        if not fields:
+            raise ValueError("a GWDS dataset needs at least one field")
+        blobs: list[tuple[str, bytes]] = []
+        for name, vol in fields.items():
+            art = vol.artifact if isinstance(vol, CompressedVolume) else vol
+            if not isinstance(art, A.Artifact):
+                raise TypeError(
+                    f"GWDS field {name!r} is a {type(vol).__name__}; expected "
+                    "CompressedVolume or artifact (compress it first)")
+            blobs.append((name, art.to_bytes()))
+        names = [n.encode() for n, _ in blobs]
+        index_size = sum(4 + len(nb) + _GWDS_ENTRY.size for nb in names)
+        off = _GWDS_HDR.size + index_size
+        parts = [_GWDS_HDR.pack(GWDS_MAGIC, _GWDS_VERSION, len(blobs))]
+        for nb, (_n, fb) in zip(names, blobs):
+            parts.append(struct.pack("<I", len(nb)) + nb + _GWDS_ENTRY.pack(off, len(fb)))
+            off += len(fb)
+        parts.extend(fb for _n, fb in blobs)
+        return b"".join(parts)
+
+    def __getitem__(self, name: str) -> CompressedVolume:
+        if name not in self._cache:
+            fo, fl = self._index[name]  # raises KeyError for unknown fields
+            art = A.from_bytes(self._blob[fo : fo + fl])
+            self._cache[name] = CompressedVolume(art, pipeline=self._pipeline)
+        return self._cache[name]
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._index)
+
+    def __len__(self) -> int:
+        return len(self._index)
+
+    @property
+    def fields(self) -> tuple[str, ...]:
+        return tuple(self._index)
+
+    @property
+    def nbytes(self) -> int:
+        return len(self._blob)
+
+    def to_bytes(self) -> bytes:
+        return self._blob
+
+    def size_report(self) -> dict:
+        per_field = {n: fl for n, (_fo, fl) in self._index.items()}
+        payload = sum(per_field.values())
+        return {"fields": per_field, "index": self.nbytes - payload,
+                "total": self.nbytes}
+
+    def __repr__(self) -> str:
+        return f"Dataset(GWDS, fields={list(self._index)}, nbytes={self.nbytes})"
+
+
+# ---------------------------------------------------------------------------
+# persistence: save / open (self-sniffing)
+# ---------------------------------------------------------------------------
+
+
+def from_bytes(blob: bytes, *, pipeline: GWLZ | None = None):
+    """Sniff the envelope magic and reconstruct the right reader.
+
+    ``SZJX``/``GWTC`` (any registered artifact container) ->
+    :class:`CompressedVolume`; ``GWDS`` -> :class:`Dataset`."""
+    if A.sniff_magic(blob) == GWDS_MAGIC:
+        return Dataset.from_bytes(blob, pipeline=pipeline)
+    return CompressedVolume(A.from_bytes(blob), pipeline=pipeline)
+
+
+def save(path: str | os.PathLike,
+         obj: "CompressedVolume | A.Artifact | Mapping | Dataset") -> int:
+    """Write ``obj`` to ``path``; returns the byte count on disk.
+
+    A volume handle (or bare artifact) writes its self-describing container
+    bytes verbatim, so bytes-on-disk == ``vol.nbytes``.  A mapping of
+    ``{name: volume}`` (or a :class:`Dataset`) writes one multi-field
+    ``GWDS`` envelope."""
+    if isinstance(obj, Dataset):
+        blob = obj.to_bytes()
+    elif isinstance(obj, Mapping):
+        blob = Dataset.build(obj)
+    elif isinstance(obj, CompressedVolume):
+        blob = obj.to_bytes()
+    elif isinstance(obj, A.Artifact):
+        blob = obj.to_bytes()
+    else:
+        raise TypeError(
+            f"cannot save {type(obj).__name__}; expected CompressedVolume, "
+            "artifact, Dataset, or a {name: volume} mapping")
+    with _builtin_open(path, "wb") as f:
+        f.write(blob)
+    return len(blob)
+
+
+def open(path: str | os.PathLike, *, pipeline: GWLZ | None = None):
+    """Open a compressed file, sniffing the envelope to pick the decoder.
+
+    Returns a :class:`CompressedVolume` for single-artifact files (``SZJX``
+    monolithic, ``GWTC`` tiled — attached GWLZ enhancer models ride along in
+    the container extras and are applied on decode) or a :class:`Dataset`
+    for multi-field ``GWDS`` files."""
+    with _builtin_open(path, "rb") as f:
+        blob = f.read()
+    return from_bytes(blob, pipeline=pipeline)
+
+
+def region_lane_count(vol: CompressedVolume, roi) -> tuple[int, int]:
+    """(lanes a region decode of ``roi`` touches, total lanes) for a tiled
+    volume — the observability hook behind ``python -m repro.cli region``
+    (monolithic volumes report (1, 1): one decode covers everything).
+
+    ``roi`` is anything ``vol[roi]`` accepts (ints, stepped slices,
+    Ellipsis, partial rank); an empty ROI touches 0 lanes on either
+    container (``vol[roi]`` short-circuits without decoding)."""
+    specs = vol._normalize_key(roi)
+    total = vol.artifact.n_tiles if vol.tiled else 1
+    if any(hi <= lo for lo, hi, _step, _sq in specs):
+        return (0, total)
+    if not vol.tiled:
+        return (1, 1)
+    ids, _ = region_tiles(vol.artifact, tuple((lo, hi) for lo, hi, _s, _q in specs))
+    return (int(ids.size), total)

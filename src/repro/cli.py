@@ -1,0 +1,194 @@
+"""Shell front door over the ``repro.api`` façade.
+
+    python -m repro.cli compress   IN OUT [--eb 1e-3 | --abs-eb X] [--tiled]
+                                   [--tile 32] [--predictor interp|lorenzo]
+                                   [--order linear|cubic] [--backend ...]
+                                   [--enhance --groups 8 --epochs 60]
+    python -m repro.cli decompress IN OUT.npy [--field NAME]
+    python -m repro.cli info       PATH
+    python -m repro.cli region     PATH --roi "8:40,:,16:32" [--out OUT.npy]
+                                   [--field NAME]
+
+``compress IN`` takes a ``.npy`` volume, or the sentinel
+``synthetic:<field>[:<side>]`` (e.g. ``synthetic:temperature:24``) for a
+generated Nyx-like field — the form CI's smoke step uses.  Every subcommand
+works on whatever envelope ``api.open`` can sniff (``SZJX``/``GWTC``/
+``GWDS``); ``--field`` selects a field from multi-field datasets.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from repro import api
+
+
+def parse_roi(text: str) -> tuple:
+    """'8:40,:,16:32' -> tuple of slices/ints (start:stop:step per axis)."""
+    out = []
+    for tok in text.split(","):
+        tok = tok.strip()
+        if ":" in tok:
+            parts = [p.strip() for p in tok.split(":")]
+            if len(parts) > 3:
+                raise ValueError(f"bad roi axis {tok!r}")
+            vals = [int(p) if p else None for p in parts] + [None] * (3 - len(parts))
+            out.append(slice(*vals))
+        elif tok:
+            out.append(int(tok))
+        else:
+            raise ValueError(f"empty roi axis in {text!r}")
+    return tuple(out)
+
+
+def _load_volume(spec: str) -> np.ndarray:
+    if spec.startswith("synthetic:"):
+        parts = spec.split(":")
+        field = parts[1] if len(parts) > 1 and parts[1] else "temperature"
+        side = int(parts[2]) if len(parts) > 2 else 32
+        from repro.data import nyx_like_field
+
+        return np.asarray(nyx_like_field((side,) * 3, field, seed=1))
+    return np.load(spec)
+
+
+def _select(obj, field: str | None, what: str):
+    """Resolve api.open output (+ optional --field) to one volume handle."""
+    if isinstance(obj, api.Dataset):
+        if field is None:
+            if len(obj) == 1:
+                return obj[next(iter(obj))]
+            raise SystemExit(
+                f"{what}: GWDS dataset has fields {list(obj)}; pick one with --field")
+        if field not in obj:
+            raise SystemExit(
+                f"{what}: no field {field!r} in dataset (fields: {list(obj)})")
+        return obj[field]
+    if field is not None:
+        raise SystemExit(f"{what}: --field only applies to GWDS datasets")
+    return obj
+
+
+def cmd_compress(args) -> int:
+    x = _load_volume(args.input)
+    enhance: bool | object = False
+    if args.enhance:
+        from repro.core.trainer import GWLZTrainConfig
+
+        enhance = GWLZTrainConfig(n_groups=args.groups, epochs=args.epochs,
+                                  min_group_pixels=args.min_group_pixels)
+    vol = api.compress(
+        x, eb=args.eb, abs_eb=args.abs_eb, tiled=args.tiled,
+        tile=(args.tile,) * x.ndim, enhance=enhance,
+        predictor=args.predictor, order=args.order, backend=args.backend)
+    n = api.save(args.output, vol)
+    print(f"wrote {args.output}: {n} bytes ({vol!r}, cr {x.nbytes / n:.1f}x)")
+    if vol.stats is not None:
+        s = vol.stats
+        print(f"enhanced: PSNR {s.psnr_sz:.2f} -> {s.psnr_gwlz:.2f} dB "
+              f"(overhead {s.overhead:.4f}x)")
+    return 0
+
+
+def cmd_decompress(args) -> int:
+    vol = _select(api.open(args.input), args.field, "decompress")
+    arr = np.asarray(vol)
+    np.save(args.output, arr)
+    print(f"wrote {args.output}: shape {arr.shape} dtype {arr.dtype} "
+          f"(eb_abs {vol.eb_abs:.4g})")
+    return 0
+
+
+def cmd_info(args) -> int:
+    obj = api.open(args.path)
+    if isinstance(obj, api.Dataset):
+        print(f"GWDS dataset: {len(obj)} fields, {obj.nbytes} bytes "
+              f"(index {obj.size_report()['index']} B)")
+        for name in obj:
+            print(f"  {name}: {obj[name]!r}")
+        return 0
+    print(repr(obj))
+    art = obj.artifact
+    if obj.tiled:
+        print(f"  tile {art.tile} grid {art.grid} ({art.n_tiles} lanes), "
+              f"predictor {art.predictor}, backend {art.backend}")
+    else:
+        print(f"  predictor {art.predictor}, order {art.order}, "
+              f"levels {art.levels}")
+    for k, v in obj.size_report().items():
+        print(f"  {k}: {v}")
+    return 0
+
+
+def cmd_region(args) -> int:
+    vol = _select(api.open(args.path), args.field, "region")
+    try:
+        roi = parse_roi(args.roi)
+    except ValueError as e:
+        raise SystemExit(f"region: bad --roi {args.roi!r}: {e}")
+    try:
+        lanes, total = api.region_lane_count(vol, roi)
+        block = vol[roi]
+    except (IndexError, ValueError) as e:
+        raise SystemExit(f"region: --roi {args.roi!r} invalid for shape "
+                         f"{vol.shape}: {e}")
+    rng = (f"min {block.min():.5g} max {block.max():.5g}" if block.size
+           else "empty")
+    print(f"roi {args.roi} -> shape {block.shape}, decoded {lanes}/{total} lanes, "
+          f"{rng}")
+    if args.out:
+        np.save(args.out, block)
+        print(f"wrote {args.out}")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.cli", description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    c = sub.add_parser("compress", help="compress a .npy (or synthetic:) volume")
+    c.add_argument("input", help=".npy path or synthetic:<field>[:<side>]")
+    c.add_argument("output")
+    c.add_argument("--eb", type=float, default=None, help="relative error bound")
+    c.add_argument("--abs-eb", type=float, default=None, help="absolute error bound")
+    c.add_argument("--tiled", action="store_true", help="GWTC tiled container")
+    c.add_argument("--tile", type=int, default=64, help="tile side (tiled only)")
+    c.add_argument("--predictor", default="interp", choices=["interp", "lorenzo"])
+    c.add_argument("--order", default="cubic", choices=["linear", "cubic"])
+    c.add_argument("--backend", default="huffman+zlib",
+                   choices=["zlib", "huffman", "huffman+zlib"])
+    c.add_argument("--enhance", action="store_true",
+                   help="train + attach group-wise GWLZ enhancers")
+    c.add_argument("--groups", type=int, default=8)
+    c.add_argument("--epochs", type=int, default=60)
+    c.add_argument("--min-group-pixels", type=int, default=256)
+    c.set_defaults(fn=cmd_compress)
+
+    d = sub.add_parser("decompress", help="full decode to a .npy file")
+    d.add_argument("input")
+    d.add_argument("output")
+    d.add_argument("--field", default=None, help="field name (GWDS datasets)")
+    d.set_defaults(fn=cmd_decompress)
+
+    i = sub.add_parser("info", help="envelope + size breakdown")
+    i.add_argument("path")
+    i.set_defaults(fn=cmd_info)
+
+    r = sub.add_parser("region", help="random-access ROI decode")
+    r.add_argument("path")
+    r.add_argument("--roi", required=True, help='e.g. "8:40,:,16:32"')
+    r.add_argument("--out", default=None, help="write the ROI to a .npy file")
+    r.add_argument("--field", default=None, help="field name (GWDS datasets)")
+    r.set_defaults(fn=cmd_region)
+
+    args = ap.parse_args(argv)
+    if args.cmd == "compress" and (args.eb is None) == (args.abs_eb is None):
+        ap.error("pass exactly one of --eb / --abs-eb")
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

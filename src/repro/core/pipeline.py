@@ -5,6 +5,7 @@ from __future__ import annotations
 
 import struct
 from dataclasses import dataclass, replace
+from functools import lru_cache
 
 import jax
 import jax.numpy as jnp
@@ -82,6 +83,13 @@ def deserialize_model(blob: bytes) -> GWLZModel:
     return GWLZModel(params=params, bn_state=bn_state, edges=edges, rscale=rscale, cfg=cfg)
 
 
+# Decode-side cache: random-access consumers (api.CompressedVolume slicing,
+# the CLI region path) decode many small ROIs from one artifact, and the
+# attached model blob is identical every time — parse it once, not per slice.
+# Keyed on the blob bytes (hashable); models are treated as immutable.
+_deserialize_model_cached = lru_cache(maxsize=8)(deserialize_model)
+
+
 # ---------------------------------------------------------------------------
 # pipeline
 # ---------------------------------------------------------------------------
@@ -103,7 +111,14 @@ class GWLZStats:
 
 class GWLZ:
     """compress(): SZ3-class compression + group-wise enhancer training.
-    decompress(): SZ decode + group-wise enhancement (Figs. 1-2)."""
+    decompress(): SZ decode + group-wise enhancement (Figs. 1-2).
+
+    The canonical entry points are container-agnostic: :meth:`compress_volume`
+    returns a lazy :class:`repro.api.CompressedVolume` handle and
+    :meth:`decode` accepts either artifact (monolithic ``SZJX`` or tiled
+    ``GWTC``) plus an optional ROI.  The historical per-container methods
+    (``compress``/``compress_tiled``/``decompress``/``decompress_tiled``/
+    ``decompress_region``) survive as thin shims over those two."""
 
     def __init__(
         self,
@@ -146,10 +161,7 @@ class GWLZ:
         )
         return artifact, stats
 
-    def compress(
-        self, x: jax.Array, *, rel_eb: float | None = None, abs_eb: float | None = None,
-        callback=None,
-    ) -> tuple[SZCompressed, GWLZStats]:
+    def _compress_mono(self, x, *, rel_eb, abs_eb, callback):
         x = jnp.asarray(x, jnp.float32)
         artifact, recon = self.sz.compress(x, rel_eb=rel_eb, abs_eb=abs_eb)
         return self._finish_compress(
@@ -159,13 +171,72 @@ class GWLZ:
             callback=callback,
         )
 
-    def decompress(self, artifact: SZCompressed) -> jax.Array:
+    # -- canonical container-agnostic entry points -----------------------------
+
+    def compress_volume(
+        self, x: jax.Array, *, tiled: bool = False, tile=(64, 64, 64),
+        rel_eb: float | None = None, abs_eb: float | None = None,
+        predictor: str | None = None, callback=None,
+    ):
+        """Compress + train + attach, returning a lazy
+        :class:`repro.api.CompressedVolume` handle (``vol.stats`` carries the
+        paper metrics; decode/slicing routes back through this pipeline so
+        the attached enhancer is always applied)."""
+        from repro.api import CompressedVolume
+
+        if tiled:
+            artifact, stats = self._compress_tiled(
+                x, tile, rel_eb=rel_eb, abs_eb=abs_eb, predictor=predictor,
+                callback=callback)
+        else:
+            if predictor is not None and predictor != self.sz.predictor:
+                raise ValueError(
+                    "monolithic predictor is fixed by the SZCompressor; "
+                    f"construct GWLZ(sz=SZCompressor(predictor={predictor!r}))")
+            artifact, stats = self._compress_mono(
+                x, rel_eb=rel_eb, abs_eb=abs_eb, callback=callback)
+        return CompressedVolume(artifact, stats=stats, pipeline=self)
+
+    def decode(self, artifact, roi=None, *, workers: int | None = None) -> jax.Array:
+        """Container-agnostic decode: full volume, or just ``roi``.
+
+        Tiled artifacts route an ROI to the random-access region path
+        (entropy-decoding only intersecting lanes, enhancer applied per
+        tile); monolithic artifacts decode once and crop after enhancement —
+        either way the ROI result is bit-identical to the full decode's
+        crop."""
+        from repro.sz import tiled
+        from repro.sz.tiled import TiledCompressed
+
+        if isinstance(artifact, TiledCompressed):
+            transform = self._tile_enhancer(artifact)
+            if roi is None:
+                return tiled.decompress_tiled(
+                    artifact, workers=workers, tile_transform=transform)
+            return tiled.decompress_region(
+                artifact, roi, workers=workers, tile_transform=transform)
         recon = self.sz.decompress(artifact)
         blob = artifact.extras.get("gwlz")
-        if blob is None:
+        if blob is not None:
+            recon = enhance(recon, _deserialize_model_cached(blob),
+                            clamp_eb=self._clamp(artifact))
+        if roi is None:
             return recon
-        model = deserialize_model(blob)
-        return enhance(recon, model, clamp_eb=self._clamp(artifact))
+        from repro.sz.tiled import normalize_roi
+
+        bounds = normalize_roi(roi, tuple(artifact.shape))
+        return recon[tuple(slice(lo, hi) for lo, hi in bounds)]
+
+    # -- per-container shims ---------------------------------------------------
+
+    def compress(
+        self, x: jax.Array, *, rel_eb: float | None = None, abs_eb: float | None = None,
+        callback=None,
+    ) -> tuple[SZCompressed, GWLZStats]:
+        return self._compress_mono(x, rel_eb=rel_eb, abs_eb=abs_eb, callback=callback)
+
+    def decompress(self, artifact: SZCompressed) -> jax.Array:
+        return self.decode(artifact)
 
     # -- tiled path (GWTC container, random-access decode) --------------------
 
@@ -181,7 +252,7 @@ class GWLZ:
         blob = artifact.extras.get("gwlz")
         if blob is None:
             return None
-        model = deserialize_model(blob)
+        model = _deserialize_model_cached(blob)
         clamp = self._clamp(artifact)
 
         def transform(tiles: jax.Array) -> jax.Array:
@@ -189,7 +260,7 @@ class GWLZ:
 
         return transform
 
-    def compress_tiled(
+    def _compress_tiled(
         self, x: jax.Array, tile=(64, 64, 64), *,
         rel_eb: float | None = None, abs_eb: float | None = None,
         predictor: str | None = None, callback=None,
@@ -228,19 +299,22 @@ class GWLZ:
             x, artifact, recon, train_fn=train_fn, enhance_fn=enhance_fn,
             callback=callback)
 
-    def decompress_tiled(self, artifact, *, workers: int | None = None) -> jax.Array:
-        from repro.sz import tiled
+    def compress_tiled(
+        self, x: jax.Array, tile=(64, 64, 64), *,
+        rel_eb: float | None = None, abs_eb: float | None = None,
+        predictor: str | None = None, callback=None,
+    ) -> tuple["object", GWLZStats]:
+        return self._compress_tiled(
+            x, tile, rel_eb=rel_eb, abs_eb=abs_eb, predictor=predictor,
+            callback=callback)
 
-        return tiled.decompress_tiled(
-            artifact, workers=workers, tile_transform=self._tile_enhancer(artifact))
+    def decompress_tiled(self, artifact, *, workers: int | None = None) -> jax.Array:
+        return self.decode(artifact, workers=workers)
 
     def decompress_region(self, artifact, roi, *, workers: int | None = None) -> jax.Array:
         """ROI decode touching only intersecting tiles; enhancement (when a
         model is attached) runs on exactly those tiles."""
-        from repro.sz import tiled
-
-        return tiled.decompress_region(
-            artifact, roi, workers=workers, tile_transform=self._tile_enhancer(artifact))
+        return self.decode(artifact, roi, workers=workers)
 
 
 def quick_compress(x, rel_eb=1e-3, n_groups=20, epochs=60, **kw):

@@ -4,6 +4,13 @@ The transform core (prediction + error-controlled quantization) runs as pure
 JAX; the entropy stage (Huffman / zlib bitstreams) runs on host, as in real
 SZ GPU pipelines.
 """
+from repro.sz.artifact import (
+    Artifact,
+    container_magics,
+    from_bytes,
+    register_container,
+    sniff_magic,
+)
 from repro.sz.quantizer import (
     prequantize,
     dequantize_pre,
@@ -28,6 +35,11 @@ from repro.sz.tiled import (
 )
 
 __all__ = [
+    "Artifact",
+    "container_magics",
+    "from_bytes",
+    "register_container",
+    "sniff_magic",
     "prequantize",
     "dequantize_pre",
     "quantize_residual",

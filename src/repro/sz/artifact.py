@@ -1,0 +1,78 @@
+"""Common artifact protocol + container magic registry.
+
+Every compressed container in the stack (`SZJX` monolithic, `GWTC` tiled —
+and any future one) is a *self-describing* byte envelope: the first four
+bytes name the container, and the container class knows how to rebuild
+itself from the blob.  This module is the one place that mapping lives, so
+consumers never switch on concrete artifact types:
+
+* :class:`Artifact` is the structural protocol both containers satisfy
+  (``shape`` / ``eb_abs`` / ``extras`` / ``to_bytes`` / ``nbytes`` /
+  ``size_report``), the contract the ``repro.api`` façade programs against,
+* :func:`register_container` is called by each container module at import
+  time to claim its magic,
+* :func:`from_bytes` sniffs the magic and dispatches to the right
+  ``from_bytes`` — the self-sniffing half of the persistence layer
+  (the multi-field ``GWDS`` dataset envelope, which holds these artifacts
+  as fields, lives one level up in ``repro.api`` — docs/DATASET_FORMAT.md).
+"""
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+MAGIC_LEN = 4
+
+
+@runtime_checkable
+class Artifact(Protocol):
+    """Structural contract every compressed container satisfies."""
+
+    shape: tuple[int, ...]
+    eb_abs: float
+    extras: dict
+
+    @property
+    def nbytes(self) -> int: ...
+
+    def to_bytes(self) -> bytes: ...
+
+    def size_report(self) -> dict: ...
+
+    @staticmethod
+    def from_bytes(blob: bytes) -> "Artifact": ...
+
+
+_CONTAINERS: dict[bytes, type] = {}
+
+
+def register_container(magic: bytes, cls: type) -> None:
+    """Claim a 4-byte magic for a container class (idempotent per class)."""
+    if len(magic) != MAGIC_LEN:
+        raise ValueError(f"container magic must be {MAGIC_LEN} bytes, got {magic!r}")
+    existing = _CONTAINERS.get(magic)
+    if existing is not None and existing is not cls:
+        raise ValueError(f"magic {magic!r} already registered to {existing.__name__}")
+    _CONTAINERS[magic] = cls
+
+
+def container_magics() -> dict[bytes, type]:
+    """Snapshot of the magic -> container-class registry."""
+    return dict(_CONTAINERS)
+
+
+def sniff_magic(blob: bytes) -> bytes:
+    if len(blob) < MAGIC_LEN:
+        raise ValueError(f"blob too short to hold a container magic ({len(blob)} bytes)")
+    return bytes(blob[:MAGIC_LEN])
+
+
+def from_bytes(blob: bytes) -> Artifact:
+    """Reconstruct whichever artifact the blob's magic names."""
+    magic = sniff_magic(blob)
+    cls = _CONTAINERS.get(magic)
+    if cls is None:
+        known = ", ".join(sorted(m.decode("ascii", "replace") for m in _CONTAINERS))
+        raise ValueError(
+            f"unknown container magic {magic!r} (registered: {known}; "
+            f"multi-field GWDS datasets open through repro.api.open)")
+    return cls.from_bytes(blob)

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.sz import artifact as A
 from repro.sz import predictor as P
 from repro.sz.entropy import decode_codes, encode_codes
 from repro.sz.quantizer import resolve_eb
@@ -145,6 +146,9 @@ class SZCompressed:
             outlier_val=oval,
             extras=extras,
         )
+
+
+A.register_container(_MAGIC, SZCompressed)
 
 
 class SZCompressor:

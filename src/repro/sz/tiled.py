@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.sz import artifact as A
 from repro.sz.predictor import ORDER_IDS, ORDER_NAMES, PRED_IDS, PRED_NAMES, get_predictor
 from repro.sz.quantizer import resolve_eb
 
@@ -216,6 +217,9 @@ class TiledCompressed:
             predictor=PRED_NAMES[pred], order=ORDER_NAMES[order],
             levels=int(levels), extras=extras,
         )
+
+
+A.register_container(_MAGIC, TiledCompressed)
 
 
 # ---------------------------------------------------------------------------
