@@ -54,5 +54,21 @@ def timed(fn, *args, repeats=3, **kw):
     return out, dt * 1e6  # us
 
 
+# Every emitted row, machine-readable — ``benchmarks/run.py --json`` dumps
+# this so CI can upload the fast run as a workflow artifact.
+ROWS: list[dict] = []
+
+
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                 "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def peak_rss_mb() -> float:
+    """Process peak RSS in MiB (ru_maxrss is KB on Linux, bytes on macOS)."""
+    import resource
+    import sys
+
+    ru = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    return ru / (1 << 20) if sys.platform == "darwin" else ru / 1024

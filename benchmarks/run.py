@@ -23,6 +23,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--only", nargs="+", default=None, metavar="MODULE",
                     help="run only these modules (throughput, fig5_losscurves, "
                          "table3_groups, table2_psnr)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also dump every emitted row as JSON (CI uploads the "
+                         "--fast run as a workflow artifact)")
     args = ap.parse_args(argv)
     if args.fast:
         os.environ["REPRO_BENCH_FAST"] = "1"
@@ -48,6 +51,14 @@ def main(argv: list[str] | None = None) -> int:
             failures += 1
             print(f"{mod.__name__},0,ERROR:{type(e).__name__}:{e}")
             traceback.print_exc()
+    if args.json:
+        import json
+
+        from benchmarks import common
+
+        with open(args.json, "w") as f:
+            json.dump({"fast": args.fast, "failures": failures,
+                       "rows": common.ROWS}, f, indent=1)
     return 1 if failures else 0
 
 

@@ -16,6 +16,7 @@ from benchmarks.common import (
     TILED_VOLUME,
     VOLUME,
     emit,
+    peak_rss_mb,
     timed,
 )
 from repro import api
@@ -83,6 +84,71 @@ def _tiled_bench() -> None:
              f"lanes={lanes}/{art.n_tiles}")
 
 
+def _stream_bench() -> None:
+    """Streaming (out-of-core) vs eager compress, with peak-RSS columns.
+
+    The streamed run compresses off an ``.npy`` memmap against a budget of
+    a quarter of the volume, so multiple batches are exercised; its row
+    reports the executor-tracked peak (the bounded working set) next to
+    process peak RSS, and the eager row reports the same RSS column for the
+    whole-volume path.  Decodes are asserted identical (lorenzo's integer
+    transform makes streamed and eager artifacts byte-equal)."""
+    import os
+    import tempfile
+
+    from repro.exec import stream_compress
+
+    x = np.asarray(nyx_like_field(TILED_VOLUME, "temperature", seed=11), np.float32)
+    nbytes = x.size * 4
+    budget = max(nbytes // 4, 1 << 20)
+    src = tempfile.mktemp(suffix=".npy")
+    np.save(src, x)
+    try:
+        out = tempfile.mktemp(suffix=".gwtc")
+        rep, us_s = timed(lambda: stream_compress(
+            src, out, tile=TILED_TILE, rel_eb=1e-3, predictor="lorenzo",
+            mem_budget=budget), repeats=1)
+        emit("throughput/stream/compress/lorenzo", us_s,
+             f"MBps={nbytes/us_s:.1f};peak_trackedMB={rep.peak_tracked_bytes/2**20:.1f};"
+             f"budgetMB={budget/2**20:.1f};rssMB={peak_rss_mb():.0f};"
+             f"batches={rep.n_batches}")
+
+        vol, us_e = timed(lambda: api.compress(
+            x, eb=1e-3, tiled=True, tile=TILED_TILE, predictor="lorenzo"),
+            repeats=1)
+        emit("throughput/stream/eager_compress/lorenzo", us_e,
+             f"MBps={nbytes/us_e:.1f};rssMB={peak_rss_mb():.0f};"
+             f"stream_vs_eager={us_e/us_s:.2f}x")
+
+        with api.open(out) as vs:
+            assert np.array_equal(np.asarray(vs), np.asarray(vol)), \
+                "streamed artifact must decode identically to the eager path"
+        os.unlink(out)
+    finally:
+        os.unlink(src)
+
+
+def _cached_region_bench() -> None:
+    """Repeated region reads through the handle's decoded-tile LRU cache:
+    the second read of the same ROI must skip entropy decode entirely."""
+    import time
+
+    x = jnp.asarray(nyx_like_field(TILED_VOLUME, "temperature", seed=13))
+    vol = api.compress(x, eb=1e-3, tiled=True, tile=TILED_TILE, predictor="lorenzo")
+    roi = tuple(slice(0, t) for t in vol.artifact.tile)
+    vol[tuple(slice(0, 1) for _ in vol.shape)]  # compile warmup off one tile
+    vol.tile_cache.clear()
+    t0 = time.perf_counter()  # timed() warms up first, which would fill the cache
+    cold = vol[roi]
+    us_cold = (time.perf_counter() - t0) * 1e6
+    warm, us_warm = timed(lambda: vol[roi], repeats=3)
+    assert np.array_equal(cold, warm)
+    assert vol.stats.cache_hits > 0, "warm reads must hit the tile cache"
+    emit("throughput/tiled/region_cached/lorenzo", us_warm,
+         f"MBps={warm.size*4/us_warm:.1f};speedup_vs_cold={us_cold/us_warm:.1f}x;"
+         f"hits={vol.stats.cache_hits}")
+
+
 def _tile_enhance_bench() -> None:
     """Batched (lax.map) tile enhancement vs the per-tile Python loop.
 
@@ -134,6 +200,8 @@ def main() -> None:
 
     _entropy_stage_bench()
     _tiled_bench()
+    _stream_bench()
+    _cached_region_bench()
     _tile_enhance_bench()
 
     # kernels (interpret mode on CPU: correctness-path timing only)

@@ -48,9 +48,9 @@ def main():
 
     vol = api.compress(x, eb=args.reb, tiled=True, tile=(args.tile,) * 3,
                        predictor=args.predictor, enhance=enhance)
-    if vol.stats is not None:
-        print(f"GWLZ tiled [{args.predictor}]: PSNR {vol.stats.psnr_sz:.2f} -> "
-              f"{vol.stats.psnr_gwlz:.2f} dB, overhead {vol.stats.overhead:.4f}x")
+    if vol.train_stats is not None:
+        print(f"GWLZ tiled [{args.predictor}]: PSNR {vol.train_stats.psnr_sz:.2f} -> "
+              f"{vol.train_stats.psnr_gwlz:.2f} dB, overhead {vol.train_stats.overhead:.4f}x")
     else:
         err = float(jnp.max(jnp.abs(jnp.asarray(np.asarray(vol)) - x)))
         print(f"SZ tiled [{args.predictor}]: max|err|={err:.4g} (eb={vol.eb_abs:.4g})")

@@ -21,26 +21,45 @@ an offset index — docs/DATASET_FORMAT.md):
     ds = api.open("snapshot.gwds")
     ds["temperature"][0:16, :, :]
 
+Opening is mmap-backed and lazy — only the lanes a read intersects are
+ever paged in — and handles are context managers over the mapping:
+
+    with api.open("field.gwlz") as vol:
+        roi = vol[8:40, :, 16:32]
+
+Out-of-core compression streams tile batches through a bounded-memory
+executor (docs/STREAMING.md) instead of materializing the volume:
+
+    api.compress_stream("huge.npy", "huge.gwlz", abs_eb=1e-3,
+                        mem_budget=256 << 20)
+
 Reference: docs/API.md.  The shell surface is ``python -m repro.cli``.
 """
 from __future__ import annotations
 
+import io
+import mmap as _mmap
 import os
 import struct
+import threading
 from collections.abc import Iterator, Mapping
 
 import numpy as np
 
 from repro.core.pipeline import GWLZ, GWLZStats
 from repro.core.trainer import GWLZTrainConfig
+from repro.exec.cache import TileCache
 from repro.sz import artifact as A
+from repro.sz import tiled as _tiled
 from repro.sz.szjax import SZCompressor
-from repro.sz.tiled import TiledCompressed, region_tiles
+from repro.sz.tiled import LaneStore, TiledCompressed, region_tiles
 
 __all__ = [
     "CompressedVolume",
     "Dataset",
+    "DecodeStats",
     "compress",
+    "compress_stream",
     "open",
     "save",
     "from_bytes",
@@ -50,11 +69,63 @@ __all__ = [
 _builtin_open = open  # shadowed below by the façade's open()
 
 GWDS_MAGIC = b"GWDS"
-_GWDS_VERSION = 1
-# magic, version, pad x3, n_fields
+_GWDS_VERSION = 2
+# v1/v2 header: magic, version, pad x3, count (v1: n_fields; v2: reserved —
+# the field count of a streamed envelope lands in the footer)
 _GWDS_HDR = struct.Struct("<4sB3xI")
 # per-field index entry tail (after the name): absolute offset, length
 _GWDS_ENTRY = struct.Struct("<QQ")
+
+# Default byte cap for the per-handle decoded-tile LRU cache.
+DEFAULT_TILE_CACHE_BYTES = int(
+    os.environ.get("REPRO_TILE_CACHE_BYTES", 256 << 20))
+
+
+def _release_resources(resources: tuple) -> None:
+    """Best-effort release of handle-owned mmap/file resources, in order
+    (views before their mmap, the mmap before its file)."""
+    for r in resources:
+        try:
+            if isinstance(r, memoryview):
+                r.release()
+            else:
+                r.close()
+        except (BufferError, OSError):  # pragma: no cover - best effort
+            pass
+
+
+class DecodeStats:
+    """Per-handle decode observability: ``tiles_decoded`` (entropy lanes
+    actually decoded by this handle), ``tiles_total`` (lanes in the
+    artifact), and ``cache_hits`` (reads served from the decoded-tile cache
+    or the one-shot full-decode cache).
+
+    Counters are plain lock-free increments — they are monotone and exact
+    under single-threaded use; under heavy concurrent hammering they may
+    undercount (never block, never corrupt).  When the volume carries
+    train-time :class:`~repro.core.pipeline.GWLZStats` (the paper metrics),
+    their attributes forward through this object, so ``vol.stats.psnr_gwlz``
+    keeps working.  The module-global ``repro.sz.tiled.DECODE_STATS`` is the
+    deprecated cross-handle mirror of the same counts."""
+
+    def __init__(self, tiles_total: int, train: GWLZStats | None = None):
+        self.tiles_decoded = 0
+        self.tiles_total = tiles_total
+        self.cache_hits = 0
+        self._train = train
+
+    def __getattr__(self, name):
+        train = self.__dict__.get("_train")
+        if train is not None and not name.startswith("_"):
+            return getattr(train, name)
+        raise AttributeError(
+            f"DecodeStats has no attribute {name!r} (train-time GWLZStats "
+            "are only attached by enhanced compression)")
+
+    def __repr__(self) -> str:
+        s = (f"DecodeStats(tiles_decoded={self.tiles_decoded}, "
+             f"tiles_total={self.tiles_total}, cache_hits={self.cache_hits}")
+        return s + (", +train)" if self._train is not None else ")")
 
 
 # ---------------------------------------------------------------------------
@@ -77,11 +148,50 @@ class CompressedVolume:
     """
 
     def __init__(self, artifact: A.Artifact, *, stats: GWLZStats | None = None,
-                 pipeline: GWLZ | None = None):
+                 pipeline: GWLZ | None = None, cache_bytes: int | None = None):
         self.artifact = artifact
-        self.stats = stats
+        self.train_stats = stats  # GWLZStats from enhanced compression, or None
         self.pipeline = pipeline or GWLZ()
         self._cache: np.ndarray | None = None  # one-shot full-decode cache
+        tiles_total = artifact.n_tiles if isinstance(artifact, TiledCompressed) else 1
+        self.stats = DecodeStats(tiles_total, train=stats)
+        self.tile_cache = TileCache(
+            DEFAULT_TILE_CACHE_BYTES if cache_bytes is None else cache_bytes)
+        self._resources: tuple = ()  # mmap/file handles owned by this handle
+        self._closed = False
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def _adopt_resources(self, resources: tuple) -> None:
+        """Take ownership of open/mmap resources (released by close())."""
+        self._resources = tuple(resources)
+
+    def _ensure_open(self) -> None:
+        if self._closed:
+            raise ValueError("operation on a closed CompressedVolume")
+
+    def close(self) -> None:
+        """Drop the decode caches and release the backing mmap (if any).
+
+        Idempotent; after close, decoding raises.  ``api.open`` handles are
+        context managers: ``with api.open(p) as vol: ...``."""
+        if self._closed:
+            return
+        self._closed = True
+        self._cache = None
+        self.tile_cache.clear()
+        lanes = getattr(self.artifact, "tile_blobs", None)
+        if isinstance(lanes, LaneStore):
+            lanes.release()
+        _release_resources(self._resources)
+        self._resources = ()
+
+    def __enter__(self) -> "CompressedVolume":
+        self._ensure_open()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
 
     # -- metadata ----------------------------------------------------------
 
@@ -140,10 +250,37 @@ class CompressedVolume:
         monolithic slicing returns views of it), so caller mutation would
         otherwise corrupt every later decode from this handle.  Copy to
         mutate."""
+        self._ensure_open()
         if self._cache is None:
             self._cache = np.asarray(self.pipeline.decode(self.artifact))
             self._cache.setflags(write=False)
+            self.stats.tiles_decoded += self.stats.tiles_total
+        else:
+            self.stats.cache_hits += self.stats.tiles_total
         return self._cache
+
+    def _tiles_for(self, ids: list[int]) -> np.ndarray:
+        """Final (enhanced) tile values for the given lane ids, through the
+        size-capped per-handle LRU: cached tiles are returned as-is, missing
+        lanes entropy-decode in ONE batched pipeline call and populate the
+        cache.  Safe under concurrent readers — lookups/inserts lock inside
+        :class:`TileCache`, decoding runs outside the lock, and the fixed
+        per-tile programs make any duplicated concurrent decode of the same
+        lane bit-identical, so a racing insert is harmless."""
+        found = self.tile_cache.get_many(ids)
+        missing = [i for i in ids if i not in found]
+        if missing:
+            dec = np.asarray(self.pipeline.decode_tiles(self.artifact, missing))
+            for j, i in enumerate(missing):
+                tile = np.ascontiguousarray(dec[j])
+                self.tile_cache.put(i, tile)
+                found[i] = tile
+        self.stats.tiles_decoded += len(missing)
+        self.stats.cache_hits += len(ids) - len(missing)
+        # deprecated module mirror: lanes the request touched (legacy
+        # semantics predate the cache, where touched == entropy-decoded)
+        _tiled._mirror_stats(len(ids), self.stats.tiles_total)
+        return np.stack([found[i] for i in ids])
 
     def __array__(self, dtype=None, copy=None) -> np.ndarray:
         arr = self.decode()
@@ -161,6 +298,7 @@ class CompressedVolume:
         reads never pay for non-intersecting lanes (and never populate the
         full-decode cache); monolithic artifacts crop the cached full
         decode."""
+        self._ensure_open()
         specs = self._normalize_key(key)
         out_empty = any(hi <= lo for lo, hi, _step, _sq in specs)
         if out_empty:
@@ -169,7 +307,9 @@ class CompressedVolume:
             return np.empty(shape, np.float32)
         if self.tiled:
             roi = tuple(slice(lo, hi) for lo, hi, _s, _q in specs)
-            block = np.asarray(self.pipeline.decode(self.artifact, roi))
+            ids, geom = region_tiles(self.artifact, roi)
+            tiles = self._tiles_for(ids.tolist())
+            block = _tiled.assemble_region(tiles, geom, self.artifact.tile)
             origin = [lo for lo, _h, _s, _q in specs]
         else:
             block = self.decode()
@@ -264,6 +404,50 @@ def compress(
         x, tiled=tiled, tile=tile, rel_eb=eb, abs_eb=abs_eb, callback=callback)
 
 
+def compress_stream(
+    source,
+    out,
+    *,
+    eb: float | None = None,
+    abs_eb: float | None = None,
+    tile=(64, 64, 64),
+    mem_budget: int = 256 << 20,
+    predictor: str = "lorenzo",
+    order: str = "cubic",
+    backend: str = "huffman+zlib",
+    max_levels: int = 5,
+    enhance: "bool | GWLZTrainConfig" = False,
+    shape=None,
+):
+    """Out-of-core compress: stream ``source`` into a ``GWTC`` container at
+    ``out`` without ever materializing the volume (docs/STREAMING.md).
+
+    ``source`` is a ``.npy`` path, an array/``np.memmap``, a
+    :class:`repro.exec.TileSource`, or an iterator of axis-0 slabs (pass
+    ``shape=``); ``out`` a path, file object, or an open
+    :class:`repro.exec.GWTCWriter` (e.g. ``GWDSWriter.stream_field``).  The
+    executor reads tile batches sized against ``mem_budget``, overlaps
+    device prequant+predict with host entropy coding, and appends lanes
+    through the incremental writer — the tile index lands in the container
+    footer on finalize.  ``enhance`` trains group-wise GWLZ enhancers on a
+    reservoir sample of tile batches (the bounded-memory counterpart of the
+    eager training pass).  A relative ``eb`` takes a min/max prepass over
+    the source, so one-shot iterator sources need ``abs_eb``.
+
+    Returns a :class:`repro.exec.StreamReport` (peak tracked bytes, batch
+    geometry, container size).  Open the result with :func:`open` — reads
+    are lane-lazy, so region decodes of a huge streamed artifact stay
+    bounded too."""
+    from repro.exec import stream_compress
+
+    return stream_compress(
+        source, out, tile=tile, rel_eb=eb, abs_eb=abs_eb, backend=backend,
+        predictor=predictor, order=order, max_levels=max_levels,
+        mem_budget=mem_budget,
+        enhance=(enhance if enhance else None),
+        shape=shape)
+
+
 # ---------------------------------------------------------------------------
 # multi-field dataset (GWDS)
 # ---------------------------------------------------------------------------
@@ -275,69 +459,84 @@ class Dataset(Mapping):
 
     Field blobs parse on first access — opening a dataset reads the shared
     offset index only, so touching one field of a many-field snapshot never
-    pays for the others."""
+    pays for the others.  When opened through ``api.open`` the backing is an
+    mmap: field parse is lazy down to the lane level, and :meth:`close` (or
+    the context manager) releases the mapping."""
 
-    def __init__(self, blob: bytes, index: dict[str, tuple[int, int]],
-                 *, pipeline: GWLZ | None = None):
+    def __init__(self, blob, index: dict[str, tuple[int, int]],
+                 *, pipeline: GWLZ | None = None, cache_bytes: int | None = None):
         self._blob = blob
         self._index = index
         self._pipeline = pipeline
+        self._cache_bytes = cache_bytes
         self._cache: dict[str, CompressedVolume] = {}
+        self._resources: tuple = ()
+        self._closed = False
 
     @staticmethod
-    def from_bytes(blob: bytes, *, pipeline: GWLZ | None = None) -> "Dataset":
+    def from_bytes(blob, *, pipeline: GWLZ | None = None,
+                   cache_bytes: int | None = None) -> "Dataset":
         try:
             magic, ver, n_fields = _GWDS_HDR.unpack_from(blob, 0)
             if magic != GWDS_MAGIC:
                 raise ValueError(f"bad GWDS blob (magic {magic!r})")
-            if ver != _GWDS_VERSION:
+            if ver == 1:
+                # v1: index-first layout, field count in the header
+                off = _GWDS_HDR.size
+                index: dict[str, tuple[int, int]] = {}
+                for _ in range(n_fields):
+                    (nlen,) = struct.unpack_from("<I", blob, off)
+                    off += 4
+                    name = bytes(blob[off : off + nlen]).decode()
+                    off += nlen
+                    fo, fl = _GWDS_ENTRY.unpack_from(blob, off)
+                    off += _GWDS_ENTRY.size
+                    if fo + fl > len(blob):
+                        raise ValueError(
+                            f"GWDS field {name!r} extends past the blob "
+                            f"({fo}+{fl} > {len(blob)}): truncated file?")
+                    index[name] = (int(fo), int(fl))
+            elif ver == _GWDS_VERSION:
+                # v2: append-only layout, index in the footer (streamable)
+                from repro.exec.writer import parse_gwds_v2
+
+                index = parse_gwds_v2(blob)
+            else:
                 raise ValueError(f"unsupported GWDS version {ver}")
-            off = _GWDS_HDR.size
-            index: dict[str, tuple[int, int]] = {}
-            for _ in range(n_fields):
-                (nlen,) = struct.unpack_from("<I", blob, off)
-                off += 4
-                name = blob[off : off + nlen].decode()
-                off += nlen
-                fo, fl = _GWDS_ENTRY.unpack_from(blob, off)
-                off += _GWDS_ENTRY.size
-                if fo + fl > len(blob):
-                    raise ValueError(
-                        f"GWDS field {name!r} extends past the blob "
-                        f"({fo}+{fl} > {len(blob)}): truncated file?")
-                index[name] = (int(fo), int(fl))
         except struct.error as e:
             raise ValueError(f"truncated or corrupt GWDS envelope: {e}") from e
-        return Dataset(blob, index, pipeline=pipeline)
+        return Dataset(blob, index, pipeline=pipeline, cache_bytes=cache_bytes)
 
     @staticmethod
     def build(fields: Mapping[str, "CompressedVolume | A.Artifact"]) -> bytes:
-        """Serialize named artifacts into one GWDS envelope."""
+        """Serialize named artifacts into one GWDS (v2) envelope.
+
+        Routed through the incremental :class:`repro.exec.writer.GWDSWriter`
+        so an eagerly built envelope is byte-identical to a streamed one."""
+        from repro.exec.writer import GWDSWriter
+
         if not fields:
             raise ValueError("a GWDS dataset needs at least one field")
-        blobs: list[tuple[str, bytes]] = []
+        buf = io.BytesIO()
+        w = GWDSWriter(buf)
         for name, vol in fields.items():
             art = vol.artifact if isinstance(vol, CompressedVolume) else vol
             if not isinstance(art, A.Artifact):
                 raise TypeError(
                     f"GWDS field {name!r} is a {type(vol).__name__}; expected "
                     "CompressedVolume or artifact (compress it first)")
-            blobs.append((name, art.to_bytes()))
-        names = [n.encode() for n, _ in blobs]
-        index_size = sum(4 + len(nb) + _GWDS_ENTRY.size for nb in names)
-        off = _GWDS_HDR.size + index_size
-        parts = [_GWDS_HDR.pack(GWDS_MAGIC, _GWDS_VERSION, len(blobs))]
-        for nb, (_n, fb) in zip(names, blobs):
-            parts.append(struct.pack("<I", len(nb)) + nb + _GWDS_ENTRY.pack(off, len(fb)))
-            off += len(fb)
-        parts.extend(fb for _n, fb in blobs)
-        return b"".join(parts)
+            w.add_field(name, art.to_bytes())
+        w.finalize()
+        return buf.getvalue()
 
     def __getitem__(self, name: str) -> CompressedVolume:
+        if self._closed:
+            raise ValueError("operation on a closed Dataset")
         if name not in self._cache:
             fo, fl = self._index[name]  # raises KeyError for unknown fields
             art = A.from_bytes(self._blob[fo : fo + fl])
-            self._cache[name] = CompressedVolume(art, pipeline=self._pipeline)
+            self._cache[name] = CompressedVolume(
+                art, pipeline=self._pipeline, cache_bytes=self._cache_bytes)
         return self._cache[name]
 
     def __iter__(self) -> Iterator[str]:
@@ -345,6 +544,31 @@ class Dataset(Mapping):
 
     def __len__(self) -> int:
         return len(self._index)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def _adopt_resources(self, resources: tuple) -> None:
+        self._resources = tuple(resources)
+
+    def close(self) -> None:
+        """Close every opened field handle and release the backing mmap."""
+        if self._closed:
+            return
+        self._closed = True
+        for vol in self._cache.values():
+            vol.close()
+        self._cache = {}
+        _release_resources(self._resources)
+        self._resources = ()
+        self._blob = b""
+
+    def __enter__(self) -> "Dataset":
+        if self._closed:
+            raise ValueError("operation on a closed Dataset")
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
 
     @property
     def fields(self) -> tuple[str, ...]:
@@ -355,7 +579,7 @@ class Dataset(Mapping):
         return len(self._blob)
 
     def to_bytes(self) -> bytes:
-        return self._blob
+        return self._blob if isinstance(self._blob, bytes) else bytes(self._blob)
 
     def size_report(self) -> dict:
         per_field = {n: fl for n, (_fo, fl) in self._index.items()}
@@ -372,14 +596,18 @@ class Dataset(Mapping):
 # ---------------------------------------------------------------------------
 
 
-def from_bytes(blob: bytes, *, pipeline: GWLZ | None = None):
+def from_bytes(blob, *, pipeline: GWLZ | None = None,
+               cache_bytes: int | None = None):
     """Sniff the envelope magic and reconstruct the right reader.
 
     ``SZJX``/``GWTC`` (any registered artifact container) ->
-    :class:`CompressedVolume`; ``GWDS`` -> :class:`Dataset`."""
+    :class:`CompressedVolume`; ``GWDS`` -> :class:`Dataset`.  ``blob`` may
+    be bytes or any buffer (a memoryview over an mmap parses lazily: tiled
+    lanes stay on disk until a decode touches them)."""
     if A.sniff_magic(blob) == GWDS_MAGIC:
-        return Dataset.from_bytes(blob, pipeline=pipeline)
-    return CompressedVolume(A.from_bytes(blob), pipeline=pipeline)
+        return Dataset.from_bytes(blob, pipeline=pipeline, cache_bytes=cache_bytes)
+    return CompressedVolume(A.from_bytes(blob), pipeline=pipeline,
+                            cache_bytes=cache_bytes)
 
 
 def save(path: str | os.PathLike,
@@ -407,16 +635,43 @@ def save(path: str | os.PathLike,
     return len(blob)
 
 
-def open(path: str | os.PathLike, *, pipeline: GWLZ | None = None):
+def open(path: str | os.PathLike, *, pipeline: GWLZ | None = None,
+         mmap: bool = True, cache_bytes: int | None = None):
     """Open a compressed file, sniffing the envelope to pick the decoder.
 
     Returns a :class:`CompressedVolume` for single-artifact files (``SZJX``
     monolithic, ``GWTC`` tiled — attached GWLZ enhancer models ride along in
     the container extras and are applied on decode) or a :class:`Dataset`
-    for multi-field ``GWDS`` files."""
-    with _builtin_open(path, "rb") as f:
-        blob = f.read()
-    return from_bytes(blob, pipeline=pipeline)
+    for multi-field ``GWDS`` files.
+
+    By default the file is memory-mapped and parsed lazily: only the
+    header/index pages are touched at open, and a region read pages in just
+    the intersecting entropy lanes.  The returned handle owns the mapping —
+    use it as a context manager (or call ``close()``) to release it;
+    ``mmap=False`` forces an eager full read (no handle-held resources).
+    ``cache_bytes`` caps the handle's decoded-tile LRU cache
+    (default ``REPRO_TILE_CACHE_BYTES`` or 256 MiB; 0 disables it)."""
+    f = _builtin_open(path, "rb")
+    mm = None
+    if mmap:
+        try:
+            mm = _mmap.mmap(f.fileno(), 0, access=_mmap.ACCESS_READ)
+        except (ValueError, OSError):
+            mm = None  # empty or unmappable file: fall back to a full read
+    if mm is None:
+        with f:
+            blob = f.read()
+        return from_bytes(blob, pipeline=pipeline, cache_bytes=cache_bytes)
+    mv = memoryview(mm)
+    try:
+        obj = from_bytes(mv, pipeline=pipeline, cache_bytes=cache_bytes)
+    except Exception:
+        mv.release()
+        mm.close()
+        f.close()
+        raise
+    obj._adopt_resources((mv, mm, f))
+    return obj
 
 
 def region_lane_count(vol: CompressedVolume, roi) -> tuple[int, int]:

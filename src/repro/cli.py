@@ -4,6 +4,7 @@
                                    [--tile 32] [--predictor interp|lorenzo]
                                    [--order linear|cubic] [--backend ...]
                                    [--enhance --groups 8 --epochs 60]
+                                   [--stream --mem-budget 256M]
     python -m repro.cli decompress IN OUT.npy [--field NAME]
     python -m repro.cli info       PATH
     python -m repro.cli region     PATH --roi "8:40,:,16:32" [--out OUT.npy]
@@ -11,9 +12,13 @@
 
 ``compress IN`` takes a ``.npy`` volume, or the sentinel
 ``synthetic:<field>[:<side>]`` (e.g. ``synthetic:temperature:24``) for a
-generated Nyx-like field — the form CI's smoke step uses.  Every subcommand
-works on whatever envelope ``api.open`` can sniff (``SZJX``/``GWTC``/
-``GWDS``); ``--field`` selects a field from multi-field datasets.
+generated Nyx-like field — the form CI's smoke step uses.  ``--stream``
+routes through the bounded-memory out-of-core executor
+(docs/STREAMING.md): ``.npy`` inputs are memory-mapped and compressed
+tile-batch by tile-batch against the ``--mem-budget`` byte cap, always into
+the tiled ``GWTC`` container.  Every subcommand works on whatever envelope
+``api.open`` can sniff (``SZJX``/``GWTC``/``GWDS``); ``--field`` selects a
+field from multi-field datasets.
 """
 from __future__ import annotations
 
@@ -23,6 +28,18 @@ import sys
 import numpy as np
 
 from repro import api
+
+
+def parse_size(text: str) -> int:
+    """'256M' / '64K' / '2G' / '1048576' -> bytes."""
+    t = text.strip().upper().removesuffix("B")
+    mult = {"K": 1 << 10, "M": 1 << 20, "G": 1 << 30}.get(t[-1:] or "", None)
+    if mult is not None:
+        t = t[:-1]
+    try:
+        return int(float(t) * (mult or 1))
+    except ValueError:
+        raise ValueError(f"bad size {text!r} (expected e.g. 256M, 64K, 1G)") from None
 
 
 def parse_roi(text: str) -> tuple:
@@ -72,21 +89,44 @@ def _select(obj, field: str | None, what: str):
 
 
 def cmd_compress(args) -> int:
-    x = _load_volume(args.input)
     enhance: bool | object = False
     if args.enhance:
         from repro.core.trainer import GWLZTrainConfig
 
         enhance = GWLZTrainConfig(n_groups=args.groups, epochs=args.epochs,
                                   min_group_pixels=args.min_group_pixels)
+    if args.stream:
+        try:
+            budget = parse_size(args.mem_budget)
+        except ValueError as e:
+            raise SystemExit(f"compress: {e}")
+        # .npy paths stream straight off the memmap; synthetic fields are
+        # generated in memory (they exist for smoke tests, not scale)
+        source = args.input if args.input.endswith(".npy") else _load_volume(args.input)
+        from repro.exec import as_source
+
+        src = as_source(source)
+        rep = api.compress_stream(
+            src, args.output, eb=args.eb, abs_eb=args.abs_eb,
+            tile=(args.tile,) * len(src.shape), mem_budget=budget,
+            predictor=args.predictor, order=args.order, backend=args.backend,
+            enhance=enhance)
+        raw = int(np.prod(rep.shape)) * 4
+        print(f"streamed {args.output}: {rep.nbytes} bytes "
+              f"(cr {raw / rep.nbytes:.1f}x) in {rep.n_batches} batches of "
+              f"{rep.batch_tiles} tiles; peak {rep.peak_tracked_bytes / 2**20:.1f} "
+              f"MiB tracked of {rep.mem_budget / 2**20:.1f} MiB budget"
+              + (", enhanced" if rep.enhanced else ""))
+        return 0
+    x = _load_volume(args.input)
     vol = api.compress(
         x, eb=args.eb, abs_eb=args.abs_eb, tiled=args.tiled,
         tile=(args.tile,) * x.ndim, enhance=enhance,
         predictor=args.predictor, order=args.order, backend=args.backend)
     n = api.save(args.output, vol)
     print(f"wrote {args.output}: {n} bytes ({vol!r}, cr {x.nbytes / n:.1f}x)")
-    if vol.stats is not None:
-        s = vol.stats
+    if vol.train_stats is not None:
+        s = vol.train_stats
         print(f"enhanced: PSNR {s.psnr_sz:.2f} -> {s.psnr_gwlz:.2f} dB "
               f"(overhead {s.overhead:.4f}x)")
     return 0
@@ -160,8 +200,13 @@ def main(argv: list[str] | None = None) -> int:
     c.add_argument("--order", default="cubic", choices=["linear", "cubic"])
     c.add_argument("--backend", default="huffman+zlib",
                    choices=["zlib", "huffman", "huffman+zlib"])
+    c.add_argument("--stream", action="store_true",
+                   help="bounded-memory out-of-core compress (GWTC container)")
+    c.add_argument("--mem-budget", default="256M",
+                   help="streaming byte budget, e.g. 64M / 512K / 1G")
     c.add_argument("--enhance", action="store_true",
-                   help="train + attach group-wise GWLZ enhancers")
+                   help="train + attach group-wise GWLZ enhancers"
+                        " (streamed runs train on a reservoir tile sample)")
     c.add_argument("--groups", type=int, default=8)
     c.add_argument("--epochs", type=int, default=60)
     c.add_argument("--min-group-pixels", type=int, default=256)

@@ -227,6 +227,20 @@ class GWLZ:
         bounds = normalize_roi(roi, tuple(artifact.shape))
         return recon[tuple(slice(lo, hi) for lo, hi in bounds)]
 
+    def decode_tiles(self, artifact, lane_ids, *, workers: int | None = None) -> jax.Array:
+        """Decode the named lanes of a tiled artifact to FINAL per-tile
+        values (enhancer applied when attached): ``[len(ids), *tile]``.
+
+        This is the unit the façade's concurrent tile cache stores — the
+        per-tile programs are fixed-shape, so any subset reconstructs the
+        exact bits the full decode would, and cached tiles can be stitched
+        with freshly decoded ones."""
+        from repro.sz import tiled
+
+        recon, _ = tiled.decode_lanes(artifact, lane_ids, workers=workers)
+        transform = self._tile_enhancer(artifact)
+        return transform(recon) if transform is not None else recon
+
     # -- per-container shims ---------------------------------------------------
 
     def compress(

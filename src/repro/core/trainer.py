@@ -221,6 +221,76 @@ def train_enhancers_tiled(
         callback=callback)
 
 
+class TileReservoir:
+    """Bounded uniform sample of (recon, residual) tile pairs from a stream.
+
+    Algorithm R over the tile stream: the streaming compressor
+    (repro.exec.executor) cannot hold every tile's reconstruction for
+    enhancer training the way the eager path does, so it offers each
+    batch's tiles here and trains on the reservoir — an unbiased sample of
+    the volume whatever its size, in ``capacity * tile_bytes * 2`` memory.
+    """
+
+    def __init__(self, capacity: int, seed: int = 0):
+        if capacity < 1:
+            raise ValueError("reservoir capacity must be >= 1")
+        self.capacity = int(capacity)
+        self.n_seen = 0
+        self._rng = np.random.default_rng(seed)
+        self._recon: list[np.ndarray] = []
+        self._resid: list[np.ndarray] = []
+
+    def __len__(self) -> int:
+        return len(self._recon)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(a.nbytes for a in self._recon) + sum(a.nbytes for a in self._resid)
+
+    def offer(self, recon_tiles: np.ndarray, resid_tiles: np.ndarray) -> int:
+        """Offer one tile batch ([B, *tile] pairs); returns bytes GROWN (for
+        the executor's memory accounting — replacements are size-neutral)."""
+        if recon_tiles.shape != resid_tiles.shape:
+            raise ValueError(
+                f"recon/residual shape mismatch: {recon_tiles.shape} vs "
+                f"{resid_tiles.shape}")
+        grown = 0
+        for rec, res in zip(recon_tiles, resid_tiles):
+            self.n_seen += 1
+            if len(self._recon) < self.capacity:
+                self._recon.append(np.array(rec, np.float32))
+                self._resid.append(np.array(res, np.float32))
+                grown += self._recon[-1].nbytes + self._resid[-1].nbytes
+            else:
+                j = int(self._rng.integers(0, self.n_seen))
+                if j < self.capacity:
+                    self._recon[j] = np.array(rec, np.float32)
+                    self._resid[j] = np.array(res, np.float32)
+        return grown
+
+    def stacks(self) -> tuple[np.ndarray, np.ndarray]:
+        if not self._recon:
+            raise ValueError("empty reservoir: offer at least one tile batch")
+        return np.stack(self._recon), np.stack(self._resid)
+
+
+def train_enhancers_streamed(
+    reservoir: TileReservoir,
+    cfg: GWLZTrainConfig = GWLZTrainConfig(),
+    *,
+    callback=None,
+) -> tuple[GWLZModel, dict]:
+    """Group-wise training for the streaming path: fit on the reservoir's
+    sampled tile pairs exactly like :func:`train_enhancers_tiled` fits on
+    the full grid.  The model is volume-agnostic (it maps decoded values to
+    residuals through the group edges), so a uniform sample trains the same
+    estimator the full stack would — just with sampling noise bounded by
+    the reservoir size."""
+    recon, resid = reservoir.stacks()
+    return train_enhancers_tiled(jnp.asarray(recon), jnp.asarray(resid), cfg,
+                                 callback=callback)
+
+
 @partial(jax.jit, static_argnames=("n_groups",))
 def _gate_groups(params, bn_state, xs, rs, ids, edges, rscale, *, n_groups):
     """Per-group acceptance test on the training volume: keep a group's

@@ -1,0 +1,38 @@
+"""Out-of-core streaming execution layer (docs/STREAMING.md).
+
+Turns compression into a plan of per-tile-batch tasks run by a
+bounded-memory executor:
+
+* :mod:`repro.exec.sources` — uniform tile access over ndarray / memmap /
+  ``.npy`` path / slab-iterator inputs,
+* :mod:`repro.exec.plan` — batch sizing against a byte budget,
+* :mod:`repro.exec.writer` — incremental append-only ``GWTC``/``GWDS``
+  writers (index written as a footer on ``finalize()``),
+* :mod:`repro.exec.executor` — the streaming loop (device predict for
+  batch k+1 overlaps host entropy coding of batch k),
+* :mod:`repro.exec.cache` — the size-capped, thread-safe LRU tile cache
+  behind ``repro.api.CompressedVolume`` region reads.
+
+The public entry point is :func:`repro.api.compress_stream`; everything
+here is importable for tests and power users.
+"""
+from repro.exec.cache import TileCache
+from repro.exec.executor import StreamReport, stream_compress
+from repro.exec.plan import StreamPlan, plan_stream
+from repro.exec.sources import ArraySource, IterSource, NpyFileSource, TileSource, as_source
+from repro.exec.writer import GWDSWriter, GWTCWriter
+
+__all__ = [
+    "ArraySource",
+    "GWDSWriter",
+    "GWTCWriter",
+    "IterSource",
+    "NpyFileSource",
+    "StreamPlan",
+    "StreamReport",
+    "TileCache",
+    "TileSource",
+    "as_source",
+    "plan_stream",
+    "stream_compress",
+]

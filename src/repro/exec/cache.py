@@ -1,0 +1,74 @@
+"""Size-capped, thread-safe LRU cache of decoded tiles.
+
+Backs ``repro.api.CompressedVolume`` region reads: repeated / overlapping
+ROI decodes under concurrent load hit finished tiles instead of re-running
+entropy decode + prediction + enhancement.  Values are read-only numpy
+tiles (post-enhancement, so a hit is the final answer); the cap is in
+BYTES, not entries, because tile shapes vary across volumes sharing a
+handle-less default.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+
+import numpy as np
+
+
+class TileCache:
+    """LRU over ``key -> read-only np.ndarray`` with a byte capacity.
+
+    All operations take the internal lock and are O(1) amortized; decoding
+    itself happens OUTSIDE the cache (callers insert results), so the lock
+    is never held across slow work.  ``capacity_bytes=0`` disables caching
+    (every ``get`` misses, ``put`` drops)."""
+
+    def __init__(self, capacity_bytes: int):
+        self.capacity = int(capacity_bytes)
+        self._lock = threading.Lock()
+        self._d: OrderedDict[object, np.ndarray] = OrderedDict()
+        self._nbytes = 0
+
+    @property
+    def nbytes(self) -> int:
+        return self._nbytes
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def get_many(self, keys) -> dict:
+        """Present entries among ``keys`` (each hit refreshed to MRU)."""
+        out = {}
+        with self._lock:
+            for k in keys:
+                v = self._d.get(k)
+                if v is not None:
+                    self._d.move_to_end(k)
+                    out[k] = v
+        return out
+
+    def put(self, key, arr: np.ndarray) -> None:
+        nb = int(arr.nbytes)
+        if nb > self.capacity:
+            return  # larger than the whole cache: never admit
+        arr = np.ascontiguousarray(arr)
+        arr.setflags(write=False)
+        with self._lock:
+            old = self._d.pop(key, None)
+            if old is not None:
+                self._nbytes -= old.nbytes
+            self._d[key] = arr
+            self._nbytes += nb
+            while self._nbytes > self.capacity:
+                _k, v = self._d.popitem(last=False)
+                self._nbytes -= v.nbytes
+
+    def clear(self) -> None:
+        with self._lock:
+            self._d.clear()
+            self._nbytes = 0
+
+    def info(self) -> dict:
+        with self._lock:
+            return {"tiles": len(self._d), "nbytes": self._nbytes,
+                    "capacity": self.capacity}

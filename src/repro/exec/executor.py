@@ -1,0 +1,270 @@
+"""Bounded-memory streaming compression executor.
+
+The volume never materializes: the plan's contiguous tile-id runs are
+pulled from a :class:`~repro.exec.sources.TileSource` one batch at a time,
+each batch runs the device transform (prequant + predict, fanned across
+the mesh by the predictor's ``encode_tiles``), and the host entropy stage
+(lane serialization + container append) runs on a single background worker
+so host coding of batch *k* overlaps device work on batch *k+1*.  In-flight
+work is capped at one encoded batch, so at most two batches of working set
+are alive — the plan sizes batches at half the byte budget, keeping the
+tracked peak within it.
+
+``MemTracker`` is the RSS hook the acceptance test asserts against: it
+accounts the executor-owned buffers exactly (batch input, payload leaves,
+reservoir), where process-level ``ru_maxrss`` is polluted by allocator and
+JIT baselines.  Both land in the :class:`StreamReport`.
+"""
+from __future__ import annotations
+
+import os
+import resource
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.exec.plan import StreamPlan, plan_stream
+from repro.exec.sources import TileSource, as_source, value_range
+from repro.exec.writer import GWTCWriter
+
+
+class MemTracker:
+    """Byte accounting for executor-owned buffers (current + high-water)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.current = 0
+        self.peak = 0
+
+    def add(self, n: int) -> None:
+        with self._lock:
+            self.current += int(n)
+            self.peak = max(self.peak, self.current)
+
+    def sub(self, n: int) -> None:
+        with self._lock:
+            self.current -= int(n)
+
+
+@dataclass
+class StreamReport:
+    """What a finished streaming compression did and what it cost."""
+
+    path: str | None
+    shape: tuple[int, ...]
+    tile: tuple[int, ...]
+    n_tiles: int
+    n_batches: int
+    batch_tiles: int
+    nbytes: int
+    eb_abs: float
+    predictor: str
+    backend: str
+    mem_budget: int
+    peak_tracked_bytes: int
+    ru_maxrss_kb: int
+    enhanced: bool = False
+    reservoir_tiles: int = 0
+
+    @property
+    def peak_over_budget(self) -> float:
+        return self.peak_tracked_bytes / max(self.mem_budget, 1)
+
+
+def _resolve_eb_streaming(source: TileSource, rel_eb, abs_eb) -> float:
+    """Streaming mirror of ``repro.sz.quantizer.resolve_eb``: same f32
+    range arithmetic (so streamed and eager artifacts agree on eb bit-for-
+    bit), fed by a block prepass instead of a whole-volume reduction."""
+    if (rel_eb is None) == (abs_eb is None):
+        raise ValueError("pass exactly one of rel_eb / abs_eb")
+    if rel_eb is not None:
+        lo, hi = value_range(source)
+        vrange = float(np.float32(hi) - np.float32(lo))
+        abs_eb = rel_eb * max(vrange, float(np.finfo(np.float32).tiny))
+        absmax = max(abs(lo), abs(hi))
+        max_q = absmax / (2.0 * float(abs_eb))
+        if max_q >= 2**30:
+            raise ValueError(
+                f"eb={abs_eb:g} too small for data magnitude "
+                f"(q={max_q:.3g} >= 2^30)")
+    return float(abs_eb)
+
+
+def _tile_bounds(i: int, grid, tile, shape):
+    coord = np.unravel_index(i, grid)
+    lo = tuple(int(c) * t for c, t in zip(coord, tile))
+    hi = tuple(min(l + t, d) for l, t, d in zip(lo, tile, shape))
+    return lo, hi
+
+
+def _read_batch(source: TileSource, ids, plan: StreamPlan) -> np.ndarray:
+    """[B, *tile] float32 batch, padded to the plan's uniform width by
+    repeating the final tile (so the device program compiles once)."""
+    B = plan.batch_tiles
+    out = np.empty((B,) + plan.tile, np.float32)
+    for j, i in enumerate(ids):
+        lo, hi = _tile_bounds(i, plan.grid, plan.tile, plan.shape)
+        out[j] = source.read_tile(lo, hi, plan.tile)
+    for j in range(len(ids), B):
+        out[j] = out[len(ids) - 1]
+    return out
+
+
+def stream_compress(
+    source,
+    dest,
+    *,
+    tile=(64, 64, 64),
+    rel_eb: float | None = None,
+    abs_eb: float | None = None,
+    backend: str = "huffman+zlib",
+    predictor: str = "lorenzo",
+    order: str = "cubic",
+    max_levels: int = 5,
+    mem_budget: int = 256 << 20,
+    enhance=None,
+    reservoir_tiles: int | None = None,
+    shape=None,
+    use_pallas: bool | None = None,
+) -> StreamReport:
+    """Compress a streamed volume into a ``GWTC`` v3 container.
+
+    ``source`` is anything :func:`repro.exec.sources.as_source` accepts;
+    ``dest`` a path, writable file object, or an already-open
+    :class:`GWTCWriter` (e.g. from ``GWDSWriter.stream_field``).  ``enhance``
+    optionally trains group-wise GWLZ enhancers on a reservoir sample of
+    (recon, residual) tile pairs — the bounded-memory stand-in for the
+    eager path's whole-volume training set — and attaches the model before
+    the footer is written.  Returns a :class:`StreamReport`; open the
+    artifact with ``api.open`` (lazily — only decoded lanes are read)."""
+    import jax
+
+    from repro.sz.predictor import get_predictor
+    from repro.sz.tiled import normalize_tile
+
+    src = as_source(source, shape=shape)
+    tile = normalize_tile(tile, len(src.shape))
+    eb = _resolve_eb_streaming(src, rel_eb, abs_eb)
+    pred = get_predictor(predictor)
+    levels = pred.plan(tile, max_levels)
+    plan = plan_stream(src.shape, tile, mem_budget, predictor=predictor,
+                       levels=levels)
+
+    if isinstance(dest, GWTCWriter):
+        # a pre-made writer already wrote its header; every header field must
+        # agree with how the lanes will actually be encoded, or the container
+        # would self-describe a decode that does not match its bytes
+        writer, path = dest, None
+        wrote = (writer.shape, writer.tile, writer.eb_abs, writer.backend,
+                 writer.predictor, writer.order, writer.levels)
+        want = (plan.shape, plan.tile, eb, backend, predictor, order, levels)
+        if wrote != want:
+            raise ValueError(
+                f"writer header {wrote} does not match the encode settings "
+                f"{want} (shape, tile, eb_abs, backend, predictor, order, "
+                "levels must agree)")
+    else:
+        path = None if hasattr(dest, "write") else str(dest)
+        writer = GWTCWriter(dest, shape=plan.shape, tile=plan.tile, eb_abs=eb,
+                            backend=backend, predictor=predictor, order=order,
+                            levels=levels)
+
+    reservoir = None
+    if enhance:
+        from repro.core.trainer import GWLZTrainConfig, TileReservoir
+
+        cfg = enhance if isinstance(enhance, GWLZTrainConfig) else GWLZTrainConfig()
+        if reservoir_tiles is None:
+            pair_bytes = 8 * int(np.prod(tile))  # f32 recon + f32 residual
+            reservoir_tiles = max(4, (mem_budget // 4) // pair_bytes)
+        reservoir = TileReservoir(int(reservoir_tiles), seed=cfg.seed)
+
+    mem = MemTracker()
+    pool = ThreadPoolExecutor(1, thread_name_prefix="gwtc-host")
+    pending = None
+
+    def host_stage(payload_np, n_real: int, nbytes_held: int) -> None:
+        try:
+            for j in range(n_real):
+                writer.append_lane(pred.lane_bytes(payload_np, j, backend))
+        finally:
+            mem.sub(nbytes_held)
+
+    try:
+        for run in plan.batches():
+            ids = list(run)
+            batch = _read_batch(src, ids, plan)
+            # same f32-overflow guard as quantizer.resolve_eb, applied to the
+            # data actually seen (an abs_eb stream takes no range prepass)
+            max_q = float(np.abs(batch[: len(ids)]).max()) / (2.0 * eb)
+            if max_q >= 2**30:
+                raise ValueError(
+                    f"eb={eb:g} too small for data magnitude "
+                    f"(q={max_q:.3g} >= 2^30)")
+            mem.add(batch.nbytes)
+            payload, recon = pred.encode_tiles(
+                batch, eb, order=order, levels=levels, use_pallas=use_pallas)
+            payload_np = jax.tree.map(np.asarray, payload)
+            held = sum(leaf.nbytes for leaf in jax.tree.leaves(payload_np))
+            mem.add(held)
+            if reservoir is not None:
+                recon_np = np.asarray(recon)[: len(ids)]
+                mem.add(recon_np.nbytes)
+                grew = reservoir.offer(recon_np, batch[: len(ids)] - recon_np)
+                mem.add(grew)
+                mem.sub(recon_np.nbytes)
+            del recon
+            mem.sub(batch.nbytes)
+            del batch
+            if pending is not None:
+                pending.result()  # cap in-flight host work at one batch
+            pending = pool.submit(host_stage, payload_np, len(ids), held)
+            del payload, payload_np
+        if pending is not None:
+            pending.result()
+            pending = None
+
+        enhanced = False
+        if reservoir is not None and len(reservoir):
+            from repro.core.pipeline import serialize_model
+            from repro.core.trainer import train_enhancers_streamed
+
+            model, _hist = train_enhancers_streamed(reservoir, cfg)
+            writer.extras["gwlz"] = serialize_model(model)
+            enhanced = True
+        nbytes = writer.finalize()
+    except BaseException:
+        if pending is not None:  # drain the worker before touching the sink
+            try:
+                pending.result()
+            except Exception:
+                pass
+            pending = None
+        if not isinstance(dest, GWTCWriter):
+            writer.abort()  # close the fd; no footer = detectably truncated
+            if path is not None:
+                try:
+                    os.unlink(path)  # don't leave a garbage container behind
+                except OSError:
+                    pass
+        raise
+    finally:
+        if pending is not None:  # a failed batch: drain the worker first
+            try:
+                pending.result()
+            except Exception:
+                pass
+        pool.shutdown(wait=True)
+        src.close()
+
+    return StreamReport(
+        path=path, shape=plan.shape, tile=plan.tile, n_tiles=plan.n_tiles,
+        n_batches=plan.n_batches, batch_tiles=plan.batch_tiles, nbytes=nbytes,
+        eb_abs=eb, predictor=predictor, backend=backend,
+        mem_budget=int(mem_budget), peak_tracked_bytes=mem.peak,
+        ru_maxrss_kb=int(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss),
+        enhanced=enhanced,
+        reservoir_tiles=len(reservoir) if reservoir is not None else 0,
+    )

@@ -1,0 +1,79 @@
+"""Streaming plans: tile-batch sizing against a byte budget.
+
+A plan turns (volume shape, tile grid, memory budget) into a sequence of
+contiguous row-major tile-id runs.  Two invariants matter:
+
+* every batch has the SAME tile count (the final short run is padded at
+  execution time), so the device encode compiles exactly one program,
+* with the executor's one-batch-in-flight overlap, at most two batches of
+  working set are alive at once — so each batch is sized to half the
+  budget, keeping tracked peak memory ≤ the budget (asserted by the
+  acceptance test at ≤ 2x for safety against allocator slack).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.sz.predictor import _padded_shape
+from repro.sz.tiled import tile_grid
+
+
+def tile_working_bytes(tile: tuple[int, ...], predictor: str, levels: int) -> int:
+    """Conservative per-tile working-set estimate for one streamed tile:
+    f32 input + the predictor's payload leaves + its recon."""
+    t = int(np.prod(tile))
+    if predictor == "interp":
+        p = int(np.prod(_padded_shape(tile, levels)))
+        # codes i32 + omask bool + ovals f32 + recon f32 on the padded grid
+        return 4 * t + 13 * p
+    # lorenzo: codes i32 + recon f32 on the tile grid
+    return 4 * t + 8 * t
+
+
+@dataclass(frozen=True)
+class StreamPlan:
+    shape: tuple[int, ...]
+    tile: tuple[int, ...]
+    grid: tuple[int, ...]
+    n_tiles: int
+    batch_tiles: int  # uniform device-batch width
+    mem_budget: int
+    tile_bytes: int  # per-tile working-set estimate
+
+    @property
+    def n_batches(self) -> int:
+        return -(-self.n_tiles // self.batch_tiles)
+
+    def batches(self):
+        """Contiguous row-major id runs: range(a, b) per batch."""
+        for a in range(0, self.n_tiles, self.batch_tiles):
+            yield range(a, min(a + self.batch_tiles, self.n_tiles))
+
+
+def plan_stream(
+    shape: tuple[int, ...],
+    tile: tuple[int, ...],
+    mem_budget: int,
+    *,
+    predictor: str = "lorenzo",
+    levels: int = 0,
+    devices: int | None = None,
+) -> StreamPlan:
+    """Size tile batches so ~two in-flight batches fit the byte budget.
+
+    ``devices`` (default: the local device count) rounds the batch down to
+    a device multiple when possible, so ``sharding.map_tiles`` fan-out pads
+    nothing in steady state."""
+    from repro.launch.sharding import device_round
+
+    grid = tile_grid(shape, tile)
+    n_tiles = int(np.prod(grid))
+    per = tile_working_bytes(tile, predictor, levels)
+    batch = max(1, int(mem_budget) // (2 * per))
+    batch = min(batch, n_tiles)
+    batch = device_round(batch, devices)
+    return StreamPlan(shape=tuple(shape), tile=tuple(tile), grid=grid,
+                      n_tiles=n_tiles, batch_tiles=batch,
+                      mem_budget=int(mem_budget), tile_bytes=per)

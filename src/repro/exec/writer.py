@@ -1,0 +1,255 @@
+"""Incremental, append-only container writers.
+
+Both writers emit *footer-indexed* layouts: lanes / field blobs are
+appended as they become available, and the offset index lands at the END of
+the container when :meth:`finalize` runs — nothing is buffered and nothing
+is seeked backwards, so a stream can be written through a pipe as well as a
+file.  ``GWTC`` v3 and ``GWDS`` v2 are exactly these layouts
+(docs/TILED_FORMAT.md, docs/DATASET_FORMAT.md); the eager
+``TiledCompressed._serialize`` / ``Dataset.build`` paths route through the
+same writers so eager and streamed bytes are identical for identical
+content.
+"""
+from __future__ import annotations
+
+import os
+import struct
+
+import numpy as np
+
+from repro.sz import tiled as T
+
+_GWDS_MAGIC = b"GWDS"
+_GWDS_VERSION = 2
+# v2 header: magic, version, pad x3, reserved u32 (field count lives in the
+# footer — it is not known when a streaming writer starts)
+_GWDS_HDR = struct.Struct("<4sB3xI")
+# v2 footer: index offset, field count, sentinel
+_GWDS_FOOTER = struct.Struct("<QI4s")
+_GWDS_SENTINEL = b"GWDX"
+
+
+class _Dest:
+    """Append-only byte sink over a path or file-like; tracks bytes written
+    relative to the container start (NOT the file start — a GWTC container
+    embedded as a GWDS field needs container-relative footer offsets)."""
+
+    def __init__(self, dest):
+        if hasattr(dest, "write"):
+            self._f = dest
+            self._own = False
+        else:
+            self._f = open(os.fspath(dest), "wb")
+            self._own = True
+        self.written = 0
+
+    def write(self, b) -> None:
+        self._f.write(b)
+        self.written += len(b)
+
+    def close(self) -> None:
+        if self._own:
+            self._f.close()
+
+
+class GWTCWriter:
+    """Streaming ``GWTC`` v3 writer: header up front, lanes appended in
+    row-major tile order, extras + index + footer on :meth:`finalize`.
+
+    The tile geometry (and therefore the lane count) is fixed at
+    construction; :meth:`finalize` refuses a partial container.  ``extras``
+    is a plain dict — attach entries (e.g. a trained GWLZ model under
+    ``"gwlz"``) any time before finalize."""
+
+    def __init__(self, dest, *, shape, tile, eb_abs: float,
+                 backend: str = "huffman+zlib", predictor: str = "lorenzo",
+                 order: str = "cubic", levels: int = 0, on_finalize=None):
+        from repro.sz.predictor import ORDER_IDS, PRED_IDS
+
+        shape = tuple(int(d) for d in shape)
+        tile = T.normalize_tile(tile, len(shape))
+        self.shape, self.tile = shape, tile
+        self.n_tiles = int(np.prod(T.tile_grid(shape, tile)))
+        self.eb_abs = float(eb_abs)
+        self.backend, self.predictor = backend, predictor
+        self.order, self.levels = order, int(levels)
+        self.extras: dict = {}
+        self._lens: list[int] = []
+        self._on_finalize = on_finalize
+        # sharing an existing sink (a GWDS envelope streaming this container
+        # as a field) keeps ITS byte counter advancing; footer offsets are
+        # container-relative either way, via the base mark
+        self._shared = isinstance(dest, _Dest)
+        self._dest = dest if self._shared else _Dest(dest)
+        self._base = self._dest.written
+        self._finalized = False
+        nd = len(shape)
+        hdr = T._HDR_V3.pack(T._MAGIC, T._VERSION, nd, T._BACKENDS[backend],
+                             PRED_IDS[predictor], ORDER_IDS[order], int(levels),
+                             0, np.float64(self.eb_abs).view(np.uint64),
+                             self.n_tiles)
+        self._dest.write(hdr)
+        self._dest.write(struct.pack(f"<{nd}q", *shape))
+        self._dest.write(struct.pack(f"<{nd}q", *tile))
+
+    @property
+    def lanes_written(self) -> int:
+        return len(self._lens)
+
+    def append_lane(self, lane) -> None:
+        if self._finalized:
+            raise ValueError("writer already finalized")
+        if len(self._lens) >= self.n_tiles:
+            raise ValueError(
+                f"container holds {self.n_tiles} lanes; lane {len(self._lens)} "
+                "does not fit")
+        lane = bytes(lane)
+        self._lens.append(len(lane))
+        self._dest.write(lane)
+
+    def finalize(self) -> int:
+        """Write extras + index + footer; returns total container bytes."""
+        if self._finalized:
+            raise ValueError("writer already finalized")
+        if len(self._lens) != self.n_tiles:
+            raise ValueError(
+                f"container needs {self.n_tiles} lanes, got {len(self._lens)}")
+        extras_off = self._dest.written - self._base
+        self._dest.write(T._pack_extras(self.extras))
+        index_off = self._dest.written - self._base
+        self._dest.write(np.asarray(self._lens, np.uint64).tobytes())
+        self._dest.write(T._FOOTER_V3.pack(extras_off, index_off))
+        self._finalized = True
+        total = self._dest.written - self._base
+        if not self._shared:
+            self._dest.close()
+        if self._on_finalize is not None:
+            self._on_finalize(total)
+        return total
+
+    def abort(self) -> None:
+        """Give up on a partial container: close the sink (when owned)
+        without writing a footer.  The bytes on disk are unreadable by
+        design — a missing footer is how a truncated stream is detected."""
+        if not self._finalized and not self._shared:
+            self._dest.close()
+
+    def __enter__(self) -> "GWTCWriter":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None and not self._finalized:
+            self.finalize()
+        elif exc_type is not None:
+            self.abort()
+
+
+class GWDSWriter:
+    """Streaming multi-field ``GWDS`` v2 writer.
+
+    Fields are appended one at a time — either whole
+    (:meth:`add_field` with a volume/artifact/bytes) or streamed in place
+    (:meth:`stream_field` returns a :class:`GWTCWriter` that writes the
+    field's lanes directly into the envelope) — so a many-field snapshot
+    never needs two fields in memory at once.  The name index is written as
+    a footer on :meth:`finalize`."""
+
+    def __init__(self, dest):
+        self._dest = _Dest(dest)
+        self._index: list[tuple[str, int, int]] = []  # (name, off, len)
+        self._names: set[str] = set()
+        self._streaming: str | None = None
+        self._finalized = False
+        self._dest.write(_GWDS_HDR.pack(_GWDS_MAGIC, _GWDS_VERSION, 0))
+
+    def _begin(self, name: str) -> int:
+        if self._finalized:
+            raise ValueError("writer already finalized")
+        if self._streaming is not None:
+            raise ValueError(
+                f"field {self._streaming!r} is still streaming; finalize it first")
+        if name in self._names:
+            raise ValueError(f"duplicate GWDS field {name!r}")
+        return self._dest.written
+
+    def _end(self, name: str, off: int, length: int) -> None:
+        self._index.append((name, off, length))
+        self._names.add(name)
+
+    def add_field(self, name: str, obj) -> None:
+        """Append one complete field (CompressedVolume, artifact, or bytes)."""
+        off = self._begin(name)
+        blob = obj if isinstance(obj, (bytes, bytearray, memoryview)) \
+            else obj.to_bytes()
+        self._dest.write(bytes(blob))
+        self._end(name, off, self._dest.written - off)
+
+    def stream_field(self, name: str, **gwtc_kwargs) -> GWTCWriter:
+        """Open a :class:`GWTCWriter` that streams one tiled field straight
+        into the envelope; the field is recorded when that writer finalizes."""
+        off = self._begin(name)
+        self._streaming = name
+
+        def done(total: int) -> None:
+            self._streaming = None
+            self._end(name, off, total)
+
+        return GWTCWriter(self._dest, on_finalize=done, **gwtc_kwargs)
+
+    def finalize(self) -> int:
+        if self._finalized:
+            raise ValueError("writer already finalized")
+        if self._streaming is not None:
+            raise ValueError(f"field {self._streaming!r} is still streaming")
+        if not self._index:
+            raise ValueError("a GWDS dataset needs at least one field")
+        index_off = self._dest.written
+        for name, off, length in self._index:
+            nb = name.encode()
+            self._dest.write(struct.pack("<I", len(nb)) + nb
+                             + struct.pack("<QQ", off, length))
+        self._dest.write(_GWDS_FOOTER.pack(index_off, len(self._index),
+                                           _GWDS_SENTINEL))
+        self._finalized = True
+        total = self._dest.written
+        self._dest.close()
+        return total
+
+    def __enter__(self) -> "GWDSWriter":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None and not self._finalized:
+            self.finalize()
+        elif exc_type is not None:
+            self._dest.close()
+
+
+def parse_gwds_v2(blob) -> dict[str, tuple[int, int]]:
+    """Footer-indexed ``GWDS`` v2 parse: name -> (offset, length).
+
+    Accepts any buffer (bytes or a memoryview over an mmap); only the
+    header, footer, and index bytes are touched."""
+    if len(blob) < _GWDS_HDR.size + _GWDS_FOOTER.size:
+        raise ValueError("truncated GWDS v2 envelope")
+    index_off, n_fields, sentinel = _GWDS_FOOTER.unpack_from(
+        blob, len(blob) - _GWDS_FOOTER.size)
+    if sentinel != _GWDS_SENTINEL:
+        raise ValueError("truncated or corrupt GWDS v2 envelope (bad footer)")
+    if index_off > len(blob) - _GWDS_FOOTER.size:
+        raise ValueError("corrupt GWDS v2 envelope (index offset out of range)")
+    index: dict[str, tuple[int, int]] = {}
+    off = index_off
+    for _ in range(n_fields):
+        (nlen,) = struct.unpack_from("<I", blob, off)
+        off += 4
+        name = bytes(blob[off : off + nlen]).decode()
+        off += nlen
+        fo, fl = struct.unpack_from("<QQ", blob, off)
+        off += 16
+        if fo + fl > index_off:
+            raise ValueError(
+                f"GWDS field {name!r} extends past the payload "
+                f"({fo}+{fl} > {index_off}): truncated file?")
+        index[name] = (int(fo), int(fl))
+    return index

@@ -154,6 +154,19 @@ def tile_mesh(devices=None):
     return jax.sharding.Mesh(devs, ("tiles",))
 
 
+def device_round(n: int, devices: int | None = None) -> int:
+    """Round a tile-batch width DOWN to a device-count multiple (≥ 1).
+
+    The streaming planner (repro.exec.plan) sizes device batches with this
+    so ``map_tiles`` fan-out pads nothing in steady state; widths smaller
+    than the device count stay as-is (the pad-with-repeats path handles
+    them, and shrinking to 0 would be worse)."""
+    d = len(jax.devices()) if devices is None else int(devices)
+    if d <= 1 or n <= d:
+        return max(1, int(n))
+    return (int(n) // d) * d
+
+
 def map_tiles(fn, tiles, *extra, mesh=None):
     """Fan a tile-batched op across the device mesh via ``shard_map``.
 

@@ -456,9 +456,15 @@ class HuffmanCodec:
         *,
         total_bits: int | None = None,
         workers: int | None = None,
+        chunk_range: tuple[int, int] | None = None,
     ) -> np.ndarray:
         """Decode a chunked stream: each chunk's bit offset comes from the
-        chunk table, so lanes decode independently and in parallel."""
+        chunk table, so lanes decode independently and in parallel.
+
+        ``chunk_range=(c0, c1)`` decodes only chunks ``[c0, c1)`` — the
+        random-access primitive behind :func:`decode_codes_range`: the
+        chunk table gives every chunk's bit offset, so a sub-range costs
+        O(symbols in range), not O(stream)."""
         if n_symbols == 0:
             return self.alphabet[:0].copy()
         if self.alphabet.size == 0:
@@ -477,6 +483,13 @@ class HuffmanCodec:
         counts = np.full(C, chunk_size, np.int64)
         counts[-1] = n_symbols - chunk_size * (C - 1)
         total = int(ends[-1])
+        if chunk_range is not None:
+            c0, c1 = chunk_range
+            if not 0 <= c0 < c1 <= C:
+                raise ValueError(f"chunk range {chunk_range} outside [0, {C})")
+            offsets, counts = offsets[c0:c1], counts[c0:c1]
+            n_symbols = int(counts.sum())
+            C = c1 - c0
         if len(stream) < (total + 7) // 8:
             raise ValueError("truncated Huffman stream")
         # tail pad absorbs finished lanes overrunning the stream end (<= 63
@@ -647,3 +660,42 @@ def decode_codes(blob: bytes, shape: tuple[int, ...], *, workers: int | None = N
             stream = zlib.decompress(stream)
         return codec.decode_bitwalk(stream, n).astype(np.int32).reshape(shape)
     raise ValueError(f"unknown entropy tag {tag!r}")
+
+
+def decode_codes_range(blob: bytes, lo: int, hi: int, *, workers: int | None = None) -> np.ndarray:
+    """Decode symbols ``[lo, hi)`` of an entropy blob as a flat int32 array.
+
+    On the chunked ``hc``/``hZ`` formats this is a true partial read: only
+    the chunks covering the range run the table-driven walk (the per-chunk
+    bit table localizes them), so the cost is O(hi - lo) symbols — the
+    sub-lane primitive for plane- or pencil-granular reads inside one tile
+    lane.  ``hZ`` still pays one zlib pass over the lane (zlib has no
+    random access); the legacy / zlib formats fall back to full decode +
+    slice.  Equals ``decode_codes(blob, (n,))[lo:hi]`` bit-for-bit."""
+    assert blob[:4] == _MAGIC, "bad entropy blob"
+    tag = blob[4:6]
+    if tag in (b"hc", b"hZ"):
+        n, cs, n_chunks, tlen = struct.unpack_from("<QIII", blob, 6)
+        if not 0 <= lo <= hi <= n:
+            raise ValueError(f"symbol range [{lo}, {hi}) outside [0, {n})")
+        if lo == hi:
+            return np.zeros(0, np.int32)
+        off = 6 + 20
+        codec = _cached_codec(blob[off : off + tlen])
+        off += tlen
+        (total,) = struct.unpack_from("<Q", blob, off)
+        off += 8
+        payload = blob[off:]
+        if tag == b"hZ":
+            payload = zlib.decompress(payload)
+        cb_dtype = _chunk_bits_dtype(cs)
+        chunk_bits = np.frombuffer(payload, cb_dtype, n_chunks)
+        stream = payload[np.dtype(cb_dtype).itemsize * n_chunks :]
+        c0, c1 = lo // cs, -(-hi // cs)
+        out = codec.decode_chunked(stream, n, cs, chunk_bits, total_bits=total,
+                                   workers=workers, chunk_range=(c0, c1))
+        return out.astype(np.int32)[lo - c0 * cs : hi - c0 * cs]
+    flat = decode_codes(blob, (-1,), workers=workers).ravel()
+    if not 0 <= lo <= hi <= flat.size:
+        raise ValueError(f"symbol range [{lo}, {hi}) outside [0, {flat.size})")
+    return flat[lo:hi]

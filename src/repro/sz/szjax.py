@@ -106,7 +106,12 @@ class SZCompressed:
         )
 
     @staticmethod
-    def from_bytes(blob: bytes) -> "SZCompressed":
+    def from_bytes(blob) -> "SZCompressed":
+        # buffer inputs (memoryview over an mmap) materialize: the monolithic
+        # container is whole-volume by construction, so there is nothing to
+        # read lazily — and owning plain bytes lets the mmap close under it
+        if not isinstance(blob, (bytes, bytearray)):
+            blob = bytes(blob)
         magic, ndim, pred, order, levels, ebbits = _HDR.unpack_from(blob, 0)
         assert magic == _MAGIC, "bad SZJX blob"
         off = _HDR.size

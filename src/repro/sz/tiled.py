@@ -40,21 +40,109 @@ from repro.sz.predictor import ORDER_IDS, ORDER_NAMES, PRED_IDS, PRED_NAMES, get
 from repro.sz.quantizer import resolve_eb
 
 _MAGIC = b"GWTC"
-_VERSION = 2
+_VERSION = 3
 # v1: magic, version, ndim, backend, pad, eb bits, n_tiles
 _HDR_V1 = struct.Struct("<4sBBBBQQ")
 # v2 adds the predictor layer: magic, version, ndim, backend, predictor,
 # order, levels, pad, eb bits, n_tiles
 _HDR_V2 = struct.Struct("<4sBBBBBBBQQ")
+# v3 keeps the v2 header fields but moves the tile index (and extras) BEHIND
+# the lanes so the container can be written append-only by a streaming
+# encoder; a fixed-size footer at the end of the blob locates them
+# (docs/STREAMING.md).  Layout: header | shape | tile | lanes... | extras |
+# index u64[n_tiles] | footer.
+_HDR_V3 = _HDR_V2
+_FOOTER_V3 = struct.Struct("<QQ")  # (extras offset, index offset)
 _BACKENDS = {"zlib": 0, "huffman": 1, "huffman+zlib": 2}
 _BACKENDS_INV = {v: k for k, v in _BACKENDS.items()}
 
-# Observability for tests/benchmarks: how many lanes the last decode touched.
-# Written under _STATS_LOCK (concurrent decodes do not interleave partial
-# updates); :func:`decode_lanes` also *returns* the lane count, which is the
-# race-free way to consume it.
+
+def _pack_extras(extras: dict) -> bytes:
+    """Extras blob shared by the eager serializer and the streaming writer:
+    count u32, then per entry klen u32 | vlen u32 | key | value, sorted."""
+    items = sorted(extras.items())
+    out = [struct.pack("<I", len(items))]
+    for k, v in items:
+        kb = k.encode()
+        out.append(struct.pack("<II", len(kb), len(v)) + kb + bytes(v))
+    return b"".join(out)
+
+
+def _unpack_extras(blob, off: int) -> dict:
+    (n_extras,) = struct.unpack_from("<I", blob, off)
+    off += 4
+    extras = {}
+    for _ in range(n_extras):
+        klen, vlen = struct.unpack_from("<II", blob, off)
+        off += 8
+        k = bytes(blob[off : off + klen]).decode()
+        off += klen
+        extras[k] = bytes(blob[off : off + vlen])
+        off += vlen
+    return extras
+
+
+class LaneStore:
+    """Lazy per-lane byte access over one backing buffer.
+
+    Holds (buffer, per-lane offsets/lengths) instead of materialized lane
+    copies, so opening an mmap-backed container reads *no* lane bytes until
+    a decode asks for them — ``store[i]`` copies exactly lane ``i`` out of
+    the buffer (a page-granular read on mmap).  ``release()`` drops the
+    buffer reference so the owning mmap can close."""
+
+    __slots__ = ("_buf", "_offs", "_lens")
+
+    def __init__(self, buf, offsets: np.ndarray, lengths: np.ndarray):
+        self._buf = buf
+        self._offs = np.asarray(offsets, np.int64)
+        self._lens = np.asarray(lengths, np.int64)
+
+    def __len__(self) -> int:
+        return int(self._lens.size)
+
+    def __getitem__(self, i: int) -> bytes:
+        if self._buf is None:
+            raise ValueError("lane store is closed (volume was released)")
+        o, n = int(self._offs[i]), int(self._lens[i])
+        return bytes(self._buf[o : o + n])
+
+    def __iter__(self):
+        return (self[i] for i in range(len(self)))
+
+    @property
+    def nbytes(self) -> int:
+        """Total lane bytes — computed from the index, no lane is read."""
+        return int(self._lens.sum())
+
+    def lane_nbytes(self, i: int) -> int:
+        return int(self._lens[i])
+
+    def release(self) -> None:
+        self._buf = None
+
+
+def lanes_nbytes(tile_blobs) -> int:
+    """Total lane payload bytes without forcing lazy lanes into memory."""
+    if isinstance(tile_blobs, LaneStore):
+        return tile_blobs.nbytes
+    return sum(len(b) for b in tile_blobs)
+
+# DEPRECATED module-global mirror: how many lanes the last decode touched.
+# Kept as a best-effort alias for existing tests/benchmarks — new code should
+# read the per-handle ``repro.api.CompressedVolume.stats`` counters
+# (tiles_decoded / tiles_total / cache_hits), which are per-volume and not
+# clobbered by concurrent decodes of other artifacts.  Written under
+# _STATS_LOCK; :func:`decode_lanes` also *returns* the lane count, which is
+# the race-free way to consume it.
 DECODE_STATS = {"tiles_decoded": 0, "tiles_total": 0}
 _STATS_LOCK = threading.Lock()
+
+
+def _mirror_stats(tiles_decoded: int, tiles_total: int) -> None:
+    with _STATS_LOCK:
+        DECODE_STATS["tiles_decoded"] = tiles_decoded
+        DECODE_STATS["tiles_total"] = tiles_total
 
 
 # ---------------------------------------------------------------------------
@@ -142,14 +230,21 @@ class TiledCompressed:
 
     @property
     def nbytes(self) -> int:
-        return len(self.to_bytes())
+        """Serialized (v3) size, computed in O(index) from the lane index —
+        never by materializing the container, so ``repr``/``size_report`` on
+        an mmap-opened volume stay lazy."""
+        return (_HDR_V3.size + 16 * len(self.shape)
+                + lanes_nbytes(self.tile_blobs)
+                + len(_pack_extras(self.extras))
+                + 8 * len(self.tile_blobs) + _FOOTER_V3.size)
 
     def size_report(self) -> dict:
-        lanes = sum(len(b) for b in self.tile_blobs)
-        extras = sum(len(v) for v in self.extras.values())
-        index = 8 * len(self.tile_blobs)
+        lanes = lanes_nbytes(self.tile_blobs)
+        extras = len(_pack_extras(self.extras))
+        index = 8 * len(self.tile_blobs) + _FOOTER_V3.size
+        header = _HDR_V3.size + 16 * len(self.shape)
         return {"lanes": lanes, "index": index, "extras": extras,
-                "header": _HDR_V2.size + 16 * len(self.shape), "total": self.nbytes}
+                "header": header, "total": header + lanes + extras + index}
 
     def to_bytes(self) -> bytes:
         key = tuple(sorted(self.extras.items()))
@@ -160,23 +255,29 @@ class TiledCompressed:
         return blob
 
     def _serialize(self) -> bytes:
-        nd = len(self.shape)
-        hdr = _HDR_V2.pack(_MAGIC, _VERSION, nd, _BACKENDS[self.backend],
-                           PRED_IDS[self.predictor], ORDER_IDS[self.order],
-                           self.levels, 0,
-                           np.float64(self.eb_abs).view(np.uint64),
-                           len(self.tile_blobs))
-        dims = struct.pack(f"<{nd}q", *self.shape) + struct.pack(f"<{nd}q", *self.tile)
-        index = np.asarray([len(b) for b in self.tile_blobs], np.uint64).tobytes()
-        extras_items = sorted(self.extras.items())
-        extras_blob = struct.pack("<I", len(extras_items))
-        for k, v in extras_items:
-            kb = k.encode()
-            extras_blob += struct.pack("<II", len(kb), len(v)) + kb + v
-        return hdr + dims + index + b"".join(self.tile_blobs) + extras_blob
+        """Eager v3 serialization — routed through the same incremental
+        writer the streaming executor uses, so eager ``to_bytes`` and a
+        finalized stream emit byte-identical containers."""
+        import io
+
+        from repro.exec.writer import GWTCWriter
+
+        buf = io.BytesIO()
+        w = GWTCWriter(buf, shape=self.shape, tile=self.tile, eb_abs=self.eb_abs,
+                       backend=self.backend, predictor=self.predictor,
+                       order=self.order, levels=self.levels)
+        for lane in self.tile_blobs:
+            w.append_lane(lane)
+        w.extras.update(self.extras)
+        w.finalize()
+        return buf.getvalue()
 
     @staticmethod
-    def from_bytes(blob: bytes) -> "TiledCompressed":
+    def from_bytes(blob) -> "TiledCompressed":
+        """Rebuild from a container blob (``bytes`` or any buffer, e.g. a
+        ``memoryview`` over an mmap).  Buffer inputs parse *lazily*: lanes
+        stay in the backing buffer behind a :class:`LaneStore` and are only
+        copied out when a decode touches them — the mmap-backed open path."""
         magic, ver = struct.unpack_from("<4sB", blob, 0)
         assert magic == _MAGIC, "bad GWTC blob"
         if ver == 1:
@@ -184,7 +285,7 @@ class TiledCompressed:
             _m, _v, nd, backend, _pad, ebbits, n_tiles = _HDR_V1.unpack_from(blob, 0)
             pred, order, levels = PRED_IDS["lorenzo"], ORDER_IDS["cubic"], 0
             off = _HDR_V1.size
-        elif ver == _VERSION:
+        elif ver in (2, 3):
             (_m, _v, nd, backend, pred, order, levels, _pad, ebbits,
              n_tiles) = _HDR_V2.unpack_from(blob, 0)
             off = _HDR_V2.size
@@ -194,22 +295,33 @@ class TiledCompressed:
         off += 8 * nd
         tile = struct.unpack_from(f"<{nd}q", blob, off)
         off += 8 * nd
-        lens = np.frombuffer(blob, np.uint64, n_tiles, offset=off)
-        off += 8 * n_tiles
-        tile_blobs = []
-        for ln in lens.astype(np.int64):
-            tile_blobs.append(blob[off : off + ln])
-            off += int(ln)
-        (n_extras,) = struct.unpack_from("<I", blob, off)
-        off += 4
-        extras = {}
-        for _ in range(n_extras):
-            klen, vlen = struct.unpack_from("<II", blob, off)
-            off += 8
-            k = blob[off : off + klen].decode()
-            off += klen
-            extras[k] = blob[off : off + vlen]
-            off += vlen
+        if ver in (1, 2):
+            # index-first layout: lane lengths precede the lane bytes
+            lens = np.frombuffer(blob, np.uint64, n_tiles, offset=off).astype(np.int64)
+            off += 8 * n_tiles
+            lanes_start = off
+            extras_off = lanes_start + int(lens.sum())
+        else:
+            # v3 footer layout: lanes start right after the dims; the footer
+            # locates the extras blob and the trailing index
+            lanes_start = off
+            if len(blob) < _FOOTER_V3.size:
+                raise ValueError("truncated GWTC v3 blob (no footer)")
+            extras_off, index_off = _FOOTER_V3.unpack_from(
+                blob, len(blob) - _FOOTER_V3.size)
+            if index_off + 8 * n_tiles > len(blob) or extras_off > index_off:
+                raise ValueError("corrupt GWTC v3 footer (offsets out of range)")
+            lens = np.frombuffer(blob, np.uint64, n_tiles, offset=index_off).astype(np.int64)
+            if lanes_start + int(lens.sum()) != extras_off:
+                raise ValueError("corrupt GWTC v3 blob (index / lane extent mismatch)")
+        offs = lanes_start + np.concatenate([[0], np.cumsum(lens[:-1])]) \
+            if n_tiles else np.zeros(0, np.int64)
+        if isinstance(blob, (bytes, bytearray)):
+            tile_blobs: "list[bytes] | LaneStore" = [
+                bytes(blob[o : o + ln]) for o, ln in zip(offs, lens)]
+        else:
+            tile_blobs = LaneStore(blob, offs, lens)
+        extras = _unpack_extras(blob, extras_off)
         return TiledCompressed(
             shape=tuple(shape), tile=tuple(tile),
             eb_abs=float(np.uint64(ebbits).view(np.float64)),
@@ -384,6 +496,19 @@ def region_tiles(artifact: TiledCompressed, roi) -> tuple[np.ndarray, tuple]:
     return ids, (bounds, ranges)
 
 
+def assemble_region(recon, geom, tile: tuple[int, ...]):
+    """Stitch + crop decoded region tiles: the pure-geometry back half of
+    :func:`decompress_region`, shared with the façade's cached read path
+    (``recon`` may be a jax array or a numpy stack of cached tiles —
+    stitching is reshape/transpose either way)."""
+    bounds, ranges = geom
+    sub_grid = tuple(b - a for a, b in ranges)
+    block = stitch_tiles(recon, sub_grid)
+    crop = tuple(slice(lo - a * t, hi - a * t)
+                 for (lo, hi), (a, _b), t in zip(bounds, ranges, tile))
+    return block[crop]
+
+
 def decompress_region(
     artifact: TiledCompressed, roi, *, workers: int | None = None, tile_transform=None
 ) -> jax.Array:
@@ -393,12 +518,8 @@ def decompress_region(
     transform is elementwise-exact, so the subset batch reconstructs the
     same values the full batch would (any ``tile_transform`` must preserve
     this by acting on each tile independently)."""
-    ids, (bounds, ranges) = region_tiles(artifact, roi)
+    ids, geom = region_tiles(artifact, roi)
     recon, _ = decode_lanes(artifact, ids.tolist(), workers=workers)
     if tile_transform is not None:
         recon = tile_transform(recon)
-    sub_grid = tuple(b - a for a, b in ranges)
-    block = stitch_tiles(recon, sub_grid)
-    crop = tuple(slice(lo - a * t, hi - a * t)
-                 for (lo, hi), (a, _b), t in zip(bounds, ranges, artifact.tile))
-    return block[crop]
+    return assemble_region(recon, geom, artifact.tile)

@@ -1,0 +1,444 @@
+"""The out-of-core streaming execution layer (docs/STREAMING.md).
+
+Acceptance surface of the streaming PR: bounded-memory compress of a volume
+larger than the budget (tracked peak <= 2x budget) whose artifact decodes
+bit-identically to the eager path; the footer-indexed GWTC v3 / GWDS v2
+containers (with golden-pinned back-compat for the v2/v1 layouts they
+replace); mmap-backed lazy `api.open` with close()/context-manager
+lifecycle; the per-handle decoded-tile LRU under concurrent readers; and
+the entropy sub-lane range decode."""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro import api, cli
+from repro.core.trainer import GWLZTrainConfig, TileReservoir
+from repro.exec import (
+    GWDSWriter,
+    GWTCWriter,
+    IterSource,
+    TileCache,
+    as_source,
+    plan_stream,
+    stream_compress,
+)
+from repro.sz import tiled
+from repro.sz.entropy import decode_codes, decode_codes_range, encode_codes
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden")
+
+
+@pytest.fixture(scope="module")
+def volume():
+    return np.load(os.path.join(GOLDEN, "volume_12_20_9.npy"))
+
+
+@pytest.fixture(scope="module")
+def field():
+    from repro.data import nyx_like_field
+
+    x = np.asarray(nyx_like_field((40, 40, 40), "temperature", seed=5), np.float32)
+    return x / np.float32(np.abs(x).max())
+
+
+# ---------------------------------------------------------------------------
+# acceptance: bounded-memory streaming compress == eager
+# ---------------------------------------------------------------------------
+
+
+def test_stream_compress_bounded_memory_bit_identical(tmp_path, field):
+    """A volume larger than the budget streams through in multiple batches,
+    tracked peak stays under 2x the budget, and the artifact is BYTE-equal
+    to the eager tiled path (lorenzo's integer transform is batch-exact)."""
+    src = tmp_path / "src.npy"
+    np.save(src, field)
+    out = tmp_path / "out.gwtc"
+    budget = field.nbytes // 4  # 64 KB budget vs a 256 KB volume
+    rep = api.compress_stream(str(src), str(out), abs_eb=1e-3, tile=(16, 16, 16),
+                              mem_budget=budget)
+    assert rep.n_batches > 1, "volume must not fit one batch"
+    assert rep.peak_tracked_bytes <= 2 * budget, \
+        f"peak {rep.peak_tracked_bytes} vs budget {budget}"
+    assert rep.nbytes == os.path.getsize(out)
+
+    eager = api.compress(field, abs_eb=1e-3, tiled=True, tile=(16, 16, 16),
+                         predictor="lorenzo")
+    with api.open(out) as vol:
+        assert vol.to_bytes() == eager.to_bytes(), \
+            "streamed container must be byte-identical to eager to_bytes()"
+        np.testing.assert_array_equal(np.asarray(vol), np.asarray(eager))
+
+
+def test_stream_compress_rel_eb_prepass_matches_eager(tmp_path, field):
+    out = tmp_path / "out.gwtc"
+    api.compress_stream(field, out, eb=1e-3, tile=(16, 16, 16),
+                        mem_budget=200_000)
+    eager = api.compress(field, eb=1e-3, tiled=True, tile=(16, 16, 16),
+                         predictor="lorenzo")
+    with api.open(out) as vol:
+        assert vol.eb_abs == eager.eb_abs
+        assert vol.to_bytes() == eager.to_bytes()
+
+
+def test_stream_compress_interp_bound_and_region(tmp_path, field):
+    """Interp streams too: the bound holds by the straggler-promotion
+    construction (up to the documented f32 ulp-at-magnitude slack), and
+    region decode equals the full decode's crop bit-for-bit."""
+    out = tmp_path / "out.gwtc"
+    rep = api.compress_stream(field, out, abs_eb=1e-3, tile=(16, 16, 16),
+                              predictor="interp", mem_budget=2_000_000)
+    assert rep.predictor == "interp"
+    with api.open(out) as vol:
+        full = np.asarray(vol)
+        slack = float(np.spacing(np.abs(field).max(), dtype=np.float32))
+        assert np.max(np.abs(full - field)) <= vol.eb_abs + slack
+        roi = (slice(4, 20), slice(3, 9), slice(0, 40))
+        np.testing.assert_array_equal(vol[roi], full[roi])
+
+
+def test_stream_iterator_source_and_reservoir_enhance(tmp_path, field):
+    slabs = (field[i : i + 8] for i in range(0, 40, 8))
+    out = tmp_path / "out.gwtc"
+    cfg = GWLZTrainConfig(n_groups=2, epochs=2, batch_size=4, min_group_pixels=16)
+    rep = api.compress_stream(slabs, out, abs_eb=1e-3, tile=(8, 8, 8),
+                              shape=field.shape, mem_budget=150_000, enhance=cfg)
+    assert rep.enhanced and rep.reservoir_tiles > 0
+    with api.open(out) as vol:
+        assert vol.enhanced, "streamed enhancer model must ride in the extras"
+        full = np.asarray(vol)
+        roi = (slice(3, 11), slice(0, 40), slice(2, 9))
+        np.testing.assert_array_equal(vol[roi], full[roi])
+        # enhancement really applied (decode differs from the raw SZ recon)
+        raw = np.asarray(tiled.decompress_tiled(vol.artifact))
+        assert not np.array_equal(full, raw)
+
+
+def test_stream_iterator_source_requires_abs_eb(field):
+    with pytest.raises(ValueError, match="abs_eb"):
+        stream_compress(iter([field]), "/tmp/never.gwtc", rel_eb=1e-3,
+                        tile=(8, 8, 8), shape=field.shape)
+
+
+def test_stream_eb_overflow_guard(tmp_path, field):
+    with pytest.raises(ValueError, match="too small for data magnitude"):
+        api.compress_stream(field * 1e7, tmp_path / "x.gwtc", abs_eb=1e-9,
+                            tile=(8, 8, 8), mem_budget=1 << 20)
+
+
+def test_plan_stream_geometry():
+    plan = plan_stream((40, 40, 40), (8, 8, 8), mem_budget=10 * 8**3 * 12 * 2,
+                       predictor="lorenzo", devices=1)
+    assert plan.n_tiles == 125
+    ids = [i for run in plan.batches() for i in run]
+    assert ids == list(range(125)), "batches must cover ids in row-major order"
+    assert all(len(r) <= plan.batch_tiles for r in plan.batches())
+    tiny = plan_stream((40, 40, 40), (8, 8, 8), mem_budget=1, devices=1)
+    assert tiny.batch_tiles == 1, "a starved budget still makes progress"
+
+
+# ---------------------------------------------------------------------------
+# containers: GWTC v3 footer layout + back-compat, incremental writers
+# ---------------------------------------------------------------------------
+
+
+def test_current_gwtc_writer_emits_v3_footer(volume):
+    art, _ = tiled.compress_tiled(volume, (8, 8, 8), abs_eb=1e-2)
+    blob = art.to_bytes()
+    assert blob[:4] == b"GWTC" and blob[4] == 3
+    # footer locates extras + index; lanes start right after the dims
+    extras_off, index_off = tiled._FOOTER_V3.unpack_from(
+        blob, len(blob) - tiled._FOOTER_V3.size)
+    lens = np.frombuffer(blob, np.uint64, art.n_tiles, offset=index_off)
+    assert int(lens.sum()) == extras_off - (tiled._HDR_V3.size + 16 * 3)
+    art2 = tiled.TiledCompressed.from_bytes(blob)
+    np.testing.assert_array_equal(
+        np.asarray(tiled.decompress_tiled(art2)),
+        np.asarray(tiled.decompress_tiled(art)))
+
+
+def test_golden_gwtc_v2_still_decodes():
+    """v2 (index-first) blobs written by the pre-streaming code keep
+    decoding bit-exactly — the layout the v3 footer bump replaced."""
+    with open(os.path.join(GOLDEN, "gwtc_v2.bin"), "rb") as f:
+        blob = f.read()
+    assert blob[4] == 2
+    art = tiled.TiledCompressed.from_bytes(blob)
+    assert art.predictor == "interp" and art.extras["meta"] == b"\x07golden"
+    np.testing.assert_array_equal(
+        np.asarray(tiled.decompress_tiled(art)),
+        np.load(os.path.join(GOLDEN, "gwtc_v2_decode.npy")))
+    # and through the façade
+    vol = api.open(os.path.join(GOLDEN, "gwtc_v2.bin"))
+    np.testing.assert_array_equal(
+        np.asarray(vol), np.load(os.path.join(GOLDEN, "gwtc_v2_decode.npy")))
+    vol.close()
+
+
+def test_golden_gwds_v1_still_opens():
+    """v1 (header-count, index-first) envelopes keep opening now that the
+    builder emits footer-indexed v2."""
+    path = os.path.join(GOLDEN, "gwds_v1.bin")
+    with open(path, "rb") as f:
+        assert f.read(5)[4] == 1
+    with api.open(path) as ds:
+        assert ds.fields == ("temperature", "baryon_density")
+        np.testing.assert_array_equal(
+            np.asarray(ds["temperature"]),
+            np.load(os.path.join(GOLDEN, "gwds_v1_temperature_decode.npy")))
+        np.testing.assert_array_equal(
+            np.asarray(ds["baryon_density"]),
+            np.load(os.path.join(GOLDEN, "gwds_v1_baryon_density_decode.npy")))
+
+
+def test_gwds_v2_build_roundtrip_and_streamed_field(tmp_path, volume):
+    mono = api.compress(volume, abs_eb=1e-2)
+    blob = api.Dataset.build({"t": mono})
+    assert blob[4] == 2, "builder must emit the footer-indexed v2 envelope"
+
+    # streamed field: a GWTC container written THROUGH the envelope
+    x = np.ascontiguousarray(volume[:8, :16, :8])
+    path = tmp_path / "snap.gwds"
+    w = GWDSWriter(path)
+    w.add_field("t", mono)
+    gw = w.stream_field("rho", shape=x.shape, tile=(8, 8, 8), eb_abs=1e-2)
+    stream_compress(x, gw, abs_eb=1e-2, tile=(8, 8, 8), mem_budget=1 << 20)
+    w.finalize()
+    eager = api.compress(x, abs_eb=1e-2, tiled=True, tile=(8, 8, 8),
+                         predictor="lorenzo")
+    with api.open(path) as ds:
+        np.testing.assert_array_equal(np.asarray(ds["t"]), np.asarray(mono))
+        assert ds["rho"].to_bytes() == eager.to_bytes()
+
+
+def test_gwtc_writer_validates_lane_count(tmp_path):
+    w = GWTCWriter(tmp_path / "x.gwtc", shape=(16, 16, 16), tile=(8, 8, 8),
+                   eb_abs=1e-3)
+    assert w.n_tiles == 8
+    w.append_lane(b"abc")
+    with pytest.raises(ValueError, match="needs 8 lanes"):
+        w.finalize()
+    for _ in range(7):
+        w.append_lane(b"xy")
+    w.finalize()
+    with pytest.raises(ValueError, match="already finalized"):
+        w.append_lane(b"z")
+
+
+def test_gwds_writer_rejects_duplicates_and_empty(tmp_path, volume):
+    mono = api.compress(volume, abs_eb=1e-2)
+    w = GWDSWriter(tmp_path / "a.gwds")
+    with pytest.raises(ValueError, match="at least one field"):
+        w.finalize()
+    w2 = GWDSWriter(tmp_path / "b.gwds")
+    w2.add_field("t", mono)
+    with pytest.raises(ValueError, match="duplicate"):
+        w2.add_field("t", mono)
+
+
+# ---------------------------------------------------------------------------
+# mmap-backed lazy open + lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_open_is_lazy_and_closeable(tmp_path, volume):
+    vol = api.compress(volume, abs_eb=1e-2, tiled=True, tile=(8, 8, 8))
+    path = tmp_path / "x.gwtc"
+    api.save(path, vol)
+    full = np.asarray(vol)
+    with api.open(path) as v2:
+        # lanes live behind a LaneStore over the mmap, not materialized copies
+        assert isinstance(v2.artifact.tile_blobs, tiled.LaneStore)
+        assert v2.artifact.tile_blobs.nbytes == vol.size_report()["lanes"]
+        roi = (slice(2, 9), slice(8, 20), slice(0, 5))
+        np.testing.assert_array_equal(v2[roi], full[roi])
+        assert (v2.stats.tiles_decoded, v2.stats.tiles_total) == (4, 12)
+    # context exit closed it: decodes now fail, resources are released
+    with pytest.raises(ValueError, match="closed"):
+        v2[0:2]
+    with pytest.raises(ValueError, match="closed"):
+        np.asarray(v2)
+    v2.close()  # idempotent
+
+    # mmap=False keeps the old eager behavior (no resources to leak)
+    v3 = api.open(path, mmap=False)
+    assert isinstance(v3.artifact.tile_blobs, list)
+    np.testing.assert_array_equal(v3[roi], full[roi])
+
+
+def test_dataset_close_releases_fields(tmp_path, volume):
+    a = api.compress(volume, abs_eb=1e-2, tiled=True, tile=(8, 8, 8))
+    path = tmp_path / "s.gwds"
+    api.save(path, {"t": a})
+    ds = api.open(path)
+    t = ds["t"]
+    np.testing.assert_array_equal(t[0:4], np.asarray(a)[0:4])
+    ds.close()
+    with pytest.raises(ValueError, match="closed"):
+        ds["t"]
+    with pytest.raises(ValueError):
+        t[0:4]  # field handle was closed with its parent
+    ds.close()  # idempotent
+
+
+# ---------------------------------------------------------------------------
+# per-handle stats + concurrent tile cache
+# ---------------------------------------------------------------------------
+
+
+def test_per_handle_stats_and_cache_hits(volume):
+    vol = api.compress(volume, abs_eb=1e-2, tiled=True, tile=(8, 8, 8))
+    roi = (slice(2, 9), slice(8, 20), slice(0, 5))
+    vol[roi]
+    assert (vol.stats.tiles_decoded, vol.stats.tiles_total,
+            vol.stats.cache_hits) == (4, 12, 0)
+    vol[roi]  # all four tiles now come from the cache
+    assert (vol.stats.tiles_decoded, vol.stats.cache_hits) == (4, 4)
+    # deprecated module mirror still reports the touched lanes
+    assert tiled.DECODE_STATS == {"tiles_decoded": 4, "tiles_total": 12}
+    # train-stats forwarding: absent here -> helpful AttributeError
+    with pytest.raises(AttributeError, match="GWLZStats"):
+        vol.stats.psnr_gwlz
+
+
+def test_cache_disabled_with_zero_budget(volume):
+    vol = api.compress(volume, abs_eb=1e-2, tiled=True, tile=(8, 8, 8))
+    vol.tile_cache = TileCache(0)
+    roi = (slice(0, 8),) * 3
+    vol[roi]
+    vol[roi]
+    assert vol.stats.cache_hits == 0 and vol.stats.tiles_decoded == 2
+
+
+def test_tile_cache_lru_eviction_bounded():
+    cache = TileCache(3 * 100)
+    a = np.zeros(25, np.float32)  # 100 bytes
+    for i in range(5):
+        cache.put(i, a.copy())
+        assert cache.nbytes <= 300
+    assert len(cache) == 3
+    assert set(cache.get_many(range(5))) == {2, 3, 4}
+    cache.get_many([2])  # refresh 2 -> MRU
+    cache.put(9, a.copy())
+    assert 2 in cache.get_many([2]) and 3 not in cache.get_many([3])
+    cache.clear()
+    assert cache.nbytes == 0 and len(cache) == 0
+
+
+def test_concurrent_readers_hit_shared_cache(field):
+    """Acceptance: hammer one shared handle with threaded overlapping region
+    reads — every read equals full[roi] bit-for-bit and the cache stays
+    under its byte cap."""
+    vol = api.compress(field, abs_eb=1e-3, tiled=True, tile=(8, 8, 8),
+                       predictor="lorenzo")
+    cap = 60 * 8 ** 3 * 4  # 60 of 125 tiles
+    vol.tile_cache = TileCache(cap)
+    full = np.asarray(api.CompressedVolume(vol.artifact))  # independent decode
+    errors: list[Exception] = []
+
+    def worker(seed: int) -> None:
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(25):
+                lo = rng.integers(0, 32, 3)
+                hi = lo + rng.integers(1, 12, 3)
+                roi = tuple(slice(int(a), int(min(b, 40)))
+                            for a, b in zip(lo, hi))
+                np.testing.assert_array_equal(vol[roi], full[roi])
+                assert vol.tile_cache.nbytes <= cap
+        except Exception as e:  # pragma: no cover - surfaced via errors
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(s,)) for s in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors[0]
+    assert vol.tile_cache.nbytes <= cap
+    assert vol.stats.cache_hits > 0, "overlapping reads must share decodes"
+
+
+# ---------------------------------------------------------------------------
+# sources + reservoir
+# ---------------------------------------------------------------------------
+
+
+def test_iter_source_window_and_errors(field):
+    src = IterSource(iter([field[:16], field[16:24], field[24:]]), field.shape)
+    np.testing.assert_array_equal(
+        src.read_block((0, 0, 0), (8, 40, 40)), field[:8])
+    np.testing.assert_array_equal(
+        src.read_block((16, 4, 8), (24, 9, 13)), field[16:24, 4:9, 8:13])
+    with pytest.raises(ValueError, match="backwards"):
+        src.read_block((0, 0, 0), (8, 40, 40))
+    with pytest.raises(ValueError, match="exhausted"):
+        IterSource(iter([field[:8]]), field.shape).read_block(
+            (8, 0, 0), (16, 40, 40))
+    with pytest.raises(ValueError, match="shape="):
+        as_source(iter([field]))
+    with pytest.raises(ValueError, match=".npy"):
+        as_source("volume.h5")
+
+
+def test_tile_reservoir_uniform_and_bounded():
+    res = TileReservoir(8, seed=0)
+    grown = res.offer(np.zeros((4, 2, 2, 2), np.float32),
+                      np.zeros((4, 2, 2, 2), np.float32))
+    assert grown == 4 * 2 * 8 * 4  # 4 pairs of 8-voxel f32 tiles
+    for i in range(20):
+        res.offer(np.full((5, 2, 2, 2), i, np.float32),
+                  np.zeros((5, 2, 2, 2), np.float32))
+    assert len(res) == 8 and res.n_seen == 104
+    recon, resid = res.stacks()
+    assert recon.shape == (8, 2, 2, 2) and resid.shape == recon.shape
+    with pytest.raises(ValueError, match="capacity"):
+        TileReservoir(0)
+    with pytest.raises(ValueError, match="empty reservoir"):
+        TileReservoir(2).stacks()
+
+
+# ---------------------------------------------------------------------------
+# entropy sub-lane range decode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["huffman", "huffman+zlib", "zlib"])
+def test_decode_codes_range_matches_full(backend):
+    rng = np.random.default_rng(0)
+    codes = rng.integers(-40, 40, size=5000).astype(np.int32)
+    blob = encode_codes(codes, backend)
+    flat = decode_codes(blob, (5000,)).ravel()
+    for lo, hi in ((0, 5000), (17, 312), (4000, 5000), (255, 257),
+                   (100, 100), (4999, 5000)):
+        np.testing.assert_array_equal(decode_codes_range(blob, lo, hi),
+                                      flat[lo:hi])
+    with pytest.raises(ValueError, match="outside"):
+        decode_codes_range(blob, 0, 5001)
+
+
+# ---------------------------------------------------------------------------
+# CLI streaming path
+# ---------------------------------------------------------------------------
+
+
+def test_cli_stream_compress_roundtrip(tmp_path, field):
+    src = tmp_path / "x.npy"
+    np.save(src, field)
+    out = tmp_path / "x.gwtc"
+    assert cli.main(["compress", str(src), str(out), "--abs-eb", "1e-3",
+                     "--stream", "--mem-budget", "64K", "--tile", "16",
+                     "--predictor", "lorenzo"]) == 0
+    eager = api.compress(field, abs_eb=1e-3, tiled=True, tile=(16, 16, 16),
+                         predictor="lorenzo")
+    with api.open(out) as vol:
+        assert vol.to_bytes() == eager.to_bytes()
+    assert cli.main(["region", str(out), "--roi", "0:16,24:40,8:32"]) == 0
+    assert cli.parse_size("256M") == 256 << 20
+    assert cli.parse_size("64k") == 64 << 10
+    assert cli.parse_size("1048576") == 1 << 20
+    assert cli.parse_size("2G") == 2 << 30
+    with pytest.raises(SystemExit):
+        cli.main(["compress", str(src), str(out), "--abs-eb", "1e-3",
+                  "--stream", "--mem-budget", "lots"])
