@@ -149,6 +149,36 @@ def _cached_region_bench() -> None:
          f"hits={vol.stats.cache_hits}")
 
 
+def _verify_overhead_bench() -> None:
+    """Integrity-check overhead (docs/ROBUSTNESS.md): open + full decode of
+    an on-disk container with lane CRCs checked up front (``verify="full"``)
+    vs skipped entirely (``verify="none"``).  The overhead column is the
+    price of checksumming every lane with the stdlib's C crc32."""
+    import os
+    import tempfile
+
+    x = jnp.asarray(nyx_like_field(TILED_VOLUME, "temperature", seed=17))
+    nbytes = x.size * 4
+    vol = api.compress(x, eb=1e-3, tiled=True, tile=TILED_TILE,
+                       predictor="lorenzo")
+    path = tempfile.mktemp(suffix=".gwtc")
+    api.save(path, vol)
+    try:
+        def run(policy: str) -> np.ndarray:
+            with api.open(path, verify=policy) as v:
+                return np.asarray(v)
+
+        off, us_off = timed(lambda: run("none"), repeats=3)
+        on, us_on = timed(lambda: run("full"), repeats=3)
+        assert np.array_equal(off, on), \
+            "verification must not change a clean decode"
+        emit("throughput/verify/off", us_off, f"MBps={nbytes/us_off:.1f}")
+        emit("throughput/verify/full", us_on,
+             f"MBps={nbytes/us_on:.1f};overhead_vs_off={(us_on/us_off-1)*100:.1f}%")
+    finally:
+        os.unlink(path)
+
+
 def _tile_enhance_bench() -> None:
     """Batched (lax.map) tile enhancement vs the per-tile Python loop.
 
@@ -201,6 +231,7 @@ def main() -> None:
     _entropy_stage_bench()
     _tiled_bench()
     _stream_bench()
+    _verify_overhead_bench()
     _cached_region_bench()
     _tile_enhance_bench()
 

@@ -48,6 +48,7 @@ import numpy as np
 
 from repro.core.pipeline import GWLZ, GWLZStats
 from repro.core.trainer import GWLZTrainConfig
+from repro.errors import CorruptContainerError, CorruptLaneError, IntegrityError
 from repro.exec.cache import TileCache
 from repro.sz import artifact as A
 from repro.sz import tiled as _tiled
@@ -56,8 +57,11 @@ from repro.sz.tiled import LaneStore, TiledCompressed, region_tiles
 
 __all__ = [
     "CompressedVolume",
+    "CorruptContainerError",
+    "CorruptLaneError",
     "Dataset",
     "DecodeStats",
+    "IntegrityError",
     "compress",
     "compress_stream",
     "open",
@@ -65,6 +69,28 @@ __all__ = [
     "from_bytes",
     "GWDS_MAGIC",
 ]
+
+_VERIFY_POLICIES = ("none", "lazy", "full")
+_CORRUPT_POLICIES = ("raise", "quarantine")
+
+
+def _apply_verify(artifact, verify: str, on_corrupt: str, fill_value: float):
+    """Install a verification policy on a parsed artifact and, under
+    ``verify="full"``, checksum every lane up front (docs/ROBUSTNESS.md).
+    Monolithic ``SZJX`` artifacts carry no per-lane CRCs — the policy is a
+    no-op there, as it is for pre-checksum ``GWTC`` containers."""
+    if verify not in _VERIFY_POLICIES:
+        raise ValueError(f"verify must be one of {_VERIFY_POLICIES}, got {verify!r}")
+    if on_corrupt not in _CORRUPT_POLICIES:
+        raise ValueError(
+            f"on_corrupt must be one of {_CORRUPT_POLICIES}, got {on_corrupt!r}")
+    if isinstance(artifact, TiledCompressed):
+        artifact.verify = verify
+        artifact.on_corrupt = on_corrupt
+        artifact.fill_value = float(fill_value)
+        if verify == "full":
+            _tiled.verify_lanes(artifact)
+    return artifact
 
 _builtin_open = open  # shadowed below by the façade's open()
 
@@ -112,6 +138,9 @@ class DecodeStats:
         self.tiles_decoded = 0
         self.tiles_total = tiles_total
         self.cache_hits = 0
+        # lanes whose CRC check failed under on_corrupt="quarantine" — these
+        # decode as the fill value instead of raising (docs/ROBUSTNESS.md)
+        self.quarantined = 0
         self._train = train
 
     def __getattr__(self, name):
@@ -125,6 +154,8 @@ class DecodeStats:
     def __repr__(self) -> str:
         s = (f"DecodeStats(tiles_decoded={self.tiles_decoded}, "
              f"tiles_total={self.tiles_total}, cache_hits={self.cache_hits}")
+        if self.quarantined:
+            s += f", quarantined={self.quarantined}"
         return s + (", +train)" if self._train is not None else ")")
 
 
@@ -255,9 +286,17 @@ class CompressedVolume:
             self._cache = np.asarray(self.pipeline.decode(self.artifact))
             self._cache.setflags(write=False)
             self.stats.tiles_decoded += self.stats.tiles_total
+            self._sync_quarantine()
         else:
             self.stats.cache_hits += self.stats.tiles_total
         return self._cache
+
+    def _sync_quarantine(self) -> None:
+        """Mirror the artifact's quarantined-lane set into the handle stats
+        (the set only grows, so an absolute copy is race-safe)."""
+        q = getattr(self.artifact, "quarantined", None)
+        if q:
+            self.stats.quarantined = len(q)
 
     def _tiles_for(self, ids: list[int]) -> np.ndarray:
         """Final (enhanced) tile values for the given lane ids, through the
@@ -277,6 +316,7 @@ class CompressedVolume:
                 found[i] = tile
         self.stats.tiles_decoded += len(missing)
         self.stats.cache_hits += len(ids) - len(missing)
+        self._sync_quarantine()
         # deprecated module mirror: lanes the request touched (legacy
         # semantics predate the cache, where touched == entropy-decoded)
         _tiled._mirror_stats(len(ids), self.stats.tiles_total)
@@ -418,6 +458,8 @@ def compress_stream(
     max_levels: int = 5,
     enhance: "bool | GWLZTrainConfig" = False,
     shape=None,
+    resume: bool = False,
+    retry=None,
 ):
     """Out-of-core compress: stream ``source`` into a ``GWTC`` container at
     ``out`` without ever materializing the volume (docs/STREAMING.md).
@@ -437,7 +479,14 @@ def compress_stream(
     Returns a :class:`repro.exec.StreamReport` (peak tracked bytes, batch
     geometry, container size).  Open the result with :func:`open` — reads
     are lane-lazy, so region decodes of a huge streamed artifact stay
-    bounded too."""
+    bounded too.
+
+    Fault tolerance (docs/ROBUSTNESS.md): transient encode/append failures
+    retry under ``retry`` (a :class:`repro.runtime.fault.RetryPolicy`;
+    default 3 attempts with backoff), each batch is journaled as it lands,
+    and ``resume=True`` re-opens an interrupted path destination at its
+    last committed batch — for Lorenzo the resumed container is
+    byte-identical to an uninterrupted run."""
     from repro.exec import stream_compress
 
     return stream_compress(
@@ -445,7 +494,7 @@ def compress_stream(
         predictor=predictor, order=order, max_levels=max_levels,
         mem_budget=mem_budget,
         enhance=(enhance if enhance else None),
-        shape=shape)
+        shape=shape, resume=resume, retry=retry)
 
 
 # ---------------------------------------------------------------------------
@@ -464,22 +513,30 @@ class Dataset(Mapping):
     the context manager) releases the mapping."""
 
     def __init__(self, blob, index: dict[str, tuple[int, int]],
-                 *, pipeline: GWLZ | None = None, cache_bytes: int | None = None):
+                 *, pipeline: GWLZ | None = None, cache_bytes: int | None = None,
+                 verify: str = "lazy", on_corrupt: str = "raise",
+                 fill_value: float = 0.0):
         self._blob = blob
         self._index = index
         self._pipeline = pipeline
         self._cache_bytes = cache_bytes
+        self._verify = verify
+        self._on_corrupt = on_corrupt
+        self._fill_value = fill_value
         self._cache: dict[str, CompressedVolume] = {}
         self._resources: tuple = ()
         self._closed = False
 
     @staticmethod
     def from_bytes(blob, *, pipeline: GWLZ | None = None,
-                   cache_bytes: int | None = None) -> "Dataset":
+                   cache_bytes: int | None = None, verify: str = "lazy",
+                   on_corrupt: str = "raise", fill_value: float = 0.0) -> "Dataset":
         try:
             magic, ver, n_fields = _GWDS_HDR.unpack_from(blob, 0)
             if magic != GWDS_MAGIC:
-                raise ValueError(f"bad GWDS blob (magic {magic!r})")
+                raise CorruptContainerError(
+                    "bad GWDS magic", offset=0, expected=GWDS_MAGIC,
+                    actual=bytes(magic))
             if ver == 1:
                 # v1: index-first layout, field count in the header
                 off = _GWDS_HDR.size
@@ -492,9 +549,10 @@ class Dataset(Mapping):
                     fo, fl = _GWDS_ENTRY.unpack_from(blob, off)
                     off += _GWDS_ENTRY.size
                     if fo + fl > len(blob):
-                        raise ValueError(
-                            f"GWDS field {name!r} extends past the blob "
-                            f"({fo}+{fl} > {len(blob)}): truncated file?")
+                        raise CorruptContainerError(
+                            f"GWDS field {name!r} extends past the blob: "
+                            "truncated file?", offset=off - _GWDS_ENTRY.size,
+                            expected=f"<= {len(blob)}", actual=int(fo + fl))
                     index[name] = (int(fo), int(fl))
             elif ver == _GWDS_VERSION:
                 # v2: append-only layout, index in the footer (streamable)
@@ -502,10 +560,15 @@ class Dataset(Mapping):
 
                 index = parse_gwds_v2(blob)
             else:
-                raise ValueError(f"unsupported GWDS version {ver}")
+                raise CorruptContainerError(
+                    "unsupported GWDS version", offset=4,
+                    expected=(1, _GWDS_VERSION), actual=int(ver))
         except struct.error as e:
-            raise ValueError(f"truncated or corrupt GWDS envelope: {e}") from e
-        return Dataset(blob, index, pipeline=pipeline, cache_bytes=cache_bytes)
+            raise CorruptContainerError(
+                f"truncated or corrupt GWDS envelope: {e}", offset=0) from e
+        return Dataset(blob, index, pipeline=pipeline, cache_bytes=cache_bytes,
+                       verify=verify, on_corrupt=on_corrupt,
+                       fill_value=fill_value)
 
     @staticmethod
     def build(fields: Mapping[str, "CompressedVolume | A.Artifact"]) -> bytes:
@@ -535,6 +598,7 @@ class Dataset(Mapping):
         if name not in self._cache:
             fo, fl = self._index[name]  # raises KeyError for unknown fields
             art = A.from_bytes(self._blob[fo : fo + fl])
+            _apply_verify(art, self._verify, self._on_corrupt, self._fill_value)
             self._cache[name] = CompressedVolume(
                 art, pipeline=self._pipeline, cache_bytes=self._cache_bytes)
         return self._cache[name]
@@ -597,17 +661,23 @@ class Dataset(Mapping):
 
 
 def from_bytes(blob, *, pipeline: GWLZ | None = None,
-               cache_bytes: int | None = None):
+               cache_bytes: int | None = None, verify: str = "lazy",
+               on_corrupt: str = "raise", fill_value: float = 0.0):
     """Sniff the envelope magic and reconstruct the right reader.
 
     ``SZJX``/``GWTC`` (any registered artifact container) ->
     :class:`CompressedVolume`; ``GWDS`` -> :class:`Dataset`.  ``blob`` may
     be bytes or any buffer (a memoryview over an mmap parses lazily: tiled
-    lanes stay on disk until a decode touches them)."""
+    lanes stay on disk until a decode touches them).  ``verify`` /
+    ``on_corrupt`` / ``fill_value`` install the integrity policy described
+    under :func:`open`.  Corrupt input raises
+    :class:`~repro.errors.CorruptContainerError`."""
     if A.sniff_magic(blob) == GWDS_MAGIC:
-        return Dataset.from_bytes(blob, pipeline=pipeline, cache_bytes=cache_bytes)
-    return CompressedVolume(A.from_bytes(blob), pipeline=pipeline,
-                            cache_bytes=cache_bytes)
+        return Dataset.from_bytes(blob, pipeline=pipeline,
+                                  cache_bytes=cache_bytes, verify=verify,
+                                  on_corrupt=on_corrupt, fill_value=fill_value)
+    art = _apply_verify(A.from_bytes(blob), verify, on_corrupt, fill_value)
+    return CompressedVolume(art, pipeline=pipeline, cache_bytes=cache_bytes)
 
 
 def save(path: str | os.PathLike,
@@ -636,7 +706,9 @@ def save(path: str | os.PathLike,
 
 
 def open(path: str | os.PathLike, *, pipeline: GWLZ | None = None,
-         mmap: bool = True, cache_bytes: int | None = None):
+         mmap: bool = True, cache_bytes: int | None = None,
+         verify: str = "lazy", on_corrupt: str = "raise",
+         fill_value: float = 0.0):
     """Open a compressed file, sniffing the envelope to pick the decoder.
 
     Returns a :class:`CompressedVolume` for single-artifact files (``SZJX``
@@ -650,7 +722,17 @@ def open(path: str | os.PathLike, *, pipeline: GWLZ | None = None,
     use it as a context manager (or call ``close()``) to release it;
     ``mmap=False`` forces an eager full read (no handle-held resources).
     ``cache_bytes`` caps the handle's decoded-tile LRU cache
-    (default ``REPRO_TILE_CACHE_BYTES`` or 256 MiB; 0 disables it)."""
+    (default ``REPRO_TILE_CACHE_BYTES`` or 256 MiB; 0 disables it).
+
+    Integrity (docs/ROBUSTNESS.md): structural damage (truncation, garbage,
+    bad offsets, metadata checksum failure) raises
+    :class:`~repro.errors.CorruptContainerError` here.  ``verify`` sets the
+    per-lane CRC policy for containers that carry checksums — ``"lazy"``
+    (default) checks each lane on its first decode, ``"full"`` checks every
+    lane at open, ``"none"`` skips checking.  A failed lane raises
+    :class:`~repro.errors.CorruptLaneError`, or — with
+    ``on_corrupt="quarantine"`` — decodes as ``fill_value`` while
+    ``vol.stats.quarantined`` counts the damaged tiles."""
     f = _builtin_open(path, "rb")
     mm = None
     if mmap:
@@ -661,10 +743,14 @@ def open(path: str | os.PathLike, *, pipeline: GWLZ | None = None,
     if mm is None:
         with f:
             blob = f.read()
-        return from_bytes(blob, pipeline=pipeline, cache_bytes=cache_bytes)
+        return from_bytes(blob, pipeline=pipeline, cache_bytes=cache_bytes,
+                          verify=verify, on_corrupt=on_corrupt,
+                          fill_value=fill_value)
     mv = memoryview(mm)
     try:
-        obj = from_bytes(mv, pipeline=pipeline, cache_bytes=cache_bytes)
+        obj = from_bytes(mv, pipeline=pipeline, cache_bytes=cache_bytes,
+                         verify=verify, on_corrupt=on_corrupt,
+                         fill_value=fill_value)
     except Exception:
         mv.release()
         mm.close()

@@ -9,6 +9,7 @@
     python -m repro.cli info       PATH
     python -m repro.cli region     PATH --roi "8:40,:,16:32" [--out OUT.npy]
                                    [--field NAME]
+    python -m repro.cli verify     PATH [--field NAME]
 
 ``compress IN`` takes a ``.npy`` volume, or the sentinel
 ``synthetic:<field>[:<side>]`` (e.g. ``synthetic:temperature:24``) for a
@@ -16,9 +17,14 @@ generated Nyx-like field — the form CI's smoke step uses.  ``--stream``
 routes through the bounded-memory out-of-core executor
 (docs/STREAMING.md): ``.npy`` inputs are memory-mapped and compressed
 tile-batch by tile-batch against the ``--mem-budget`` byte cap, always into
-the tiled ``GWTC`` container.  Every subcommand works on whatever envelope
-``api.open`` can sniff (``SZJX``/``GWTC``/``GWDS``); ``--field`` selects a
-field from multi-field datasets.
+the tiled ``GWTC`` container; ``--retries`` sets the per-batch retry
+budget for transient faults and ``--resume`` continues an interrupted
+stream from its commit journal (docs/ROBUSTNESS.md).  ``verify`` checks a
+container end to end — envelope structure, metadata checksum, and every
+lane CRC — and exits nonzero on the first corruption.  Every subcommand
+works on whatever envelope ``api.open`` can sniff
+(``SZJX``/``GWTC``/``GWDS``); ``--field`` selects a field from multi-field
+datasets.
 """
 from __future__ import annotations
 
@@ -106,18 +112,32 @@ def cmd_compress(args) -> int:
         from repro.exec import as_source
 
         src = as_source(source)
+        retry = None
+        if args.retries is not None:
+            from repro.runtime.fault import RetryPolicy
+
+            retry = RetryPolicy(max_attempts=max(1, args.retries))
         rep = api.compress_stream(
             src, args.output, eb=args.eb, abs_eb=args.abs_eb,
             tile=(args.tile,) * len(src.shape), mem_budget=budget,
             predictor=args.predictor, order=args.order, backend=args.backend,
-            enhance=enhance)
+            enhance=enhance, resume=args.resume, retry=retry)
         raw = int(np.prod(rep.shape)) * 4
+        fault = ""
+        if rep.retries:
+            fault = (f"; {rep.retries} retr"
+                     f"{'y' if rep.retries == 1 else 'ies'} on batches "
+                     f"{list(rep.failed_batches)}")
+        if rep.resumed_batches:
+            fault += f"; resumed past {rep.resumed_batches} committed batches"
         print(f"streamed {args.output}: {rep.nbytes} bytes "
               f"(cr {raw / rep.nbytes:.1f}x) in {rep.n_batches} batches of "
               f"{rep.batch_tiles} tiles; peak {rep.peak_tracked_bytes / 2**20:.1f} "
               f"MiB tracked of {rep.mem_budget / 2**20:.1f} MiB budget"
-              + (", enhanced" if rep.enhanced else ""))
+              + (", enhanced" if rep.enhanced else "") + fault)
         return 0
+    if args.resume:
+        raise SystemExit("compress: --resume requires --stream")
     x = _load_volume(args.input)
     vol = api.compress(
         x, eb=args.eb, abs_eb=args.abs_eb, tiled=args.tiled,
@@ -184,6 +204,37 @@ def cmd_region(args) -> int:
     return 0
 
 
+def cmd_verify(args) -> int:
+    from repro.errors import IntegrityError
+
+    try:
+        obj = api.open(args.path, verify="full")
+    except IntegrityError as e:
+        print(f"CORRUPT: {e}", file=sys.stderr)
+        return 1
+    with obj:
+        if isinstance(obj, api.Dataset):
+            names = [args.field] if args.field else list(obj)
+            try:
+                for name in names:
+                    vol = obj[name]  # field parse + full lane verification
+                    lanes = vol.stats.tiles_total if vol.tiled else 1
+                    print(f"ok: field {name!r} ({lanes} lanes)")
+            except IntegrityError as e:
+                print(f"CORRUPT: field {name!r}: {e}", file=sys.stderr)
+                return 1
+            return 0
+        if args.field is not None:
+            raise SystemExit("verify: --field only applies to GWDS datasets")
+        art = obj.artifact
+        checked = getattr(art, "lane_crcs", None)
+        note = (f"{art.n_tiles} lane CRCs checked" if checked is not None
+                else "no per-lane checksums (pre-checksum container); "
+                     "structural checks only")
+        print(f"ok: {args.path} ({note})")
+    return 0
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(prog="repro.cli", description=__doc__,
                                  formatter_class=argparse.RawDescriptionHelpFormatter)
@@ -204,6 +255,12 @@ def main(argv: list[str] | None = None) -> int:
                    help="bounded-memory out-of-core compress (GWTC container)")
     c.add_argument("--mem-budget", default="256M",
                    help="streaming byte budget, e.g. 64M / 512K / 1G")
+    c.add_argument("--resume", action="store_true",
+                   help="continue an interrupted --stream run from its "
+                        "commit journal (<output>.journal)")
+    c.add_argument("--retries", type=int, default=None,
+                   help="per-batch retry attempts for transient faults "
+                        "(default: 3)")
     c.add_argument("--enhance", action="store_true",
                    help="train + attach group-wise GWLZ enhancers"
                         " (streamed runs train on a reservoir tile sample)")
@@ -228,6 +285,12 @@ def main(argv: list[str] | None = None) -> int:
     r.add_argument("--out", default=None, help="write the ROI to a .npy file")
     r.add_argument("--field", default=None, help="field name (GWDS datasets)")
     r.set_defaults(fn=cmd_region)
+
+    v = sub.add_parser("verify", help="end-to-end integrity check "
+                                      "(structure + metadata + lane CRCs)")
+    v.add_argument("path")
+    v.add_argument("--field", default=None, help="field name (GWDS datasets)")
+    v.set_defaults(fn=cmd_verify)
 
     args = ap.parse_args(argv)
     if args.cmd == "compress" and (args.eb is None) == (args.abs_eb is None):

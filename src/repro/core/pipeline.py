@@ -237,9 +237,15 @@ class GWLZ:
         with freshly decoded ones."""
         from repro.sz import tiled
 
-        recon, _ = tiled.decode_lanes(artifact, lane_ids, workers=workers)
+        recon, _, bad = tiled.decode_lanes(artifact, lane_ids, workers=workers,
+                                           with_mask=True)
         transform = self._tile_enhancer(artifact)
-        return transform(recon) if transform is not None else recon
+        if transform is not None:
+            recon = transform(recon)
+            # quarantined tiles must stay at the fill value — the enhancer
+            # must not fabricate data for a lane that failed its checksum
+            recon = tiled._refill_quarantined(recon, bad, artifact.fill_value)
+        return recon
 
     # -- per-container shims ---------------------------------------------------
 

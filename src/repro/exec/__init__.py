@@ -20,7 +20,7 @@ from repro.exec.cache import TileCache
 from repro.exec.executor import StreamReport, stream_compress
 from repro.exec.plan import StreamPlan, plan_stream
 from repro.exec.sources import ArraySource, IterSource, NpyFileSource, TileSource, as_source
-from repro.exec.writer import GWDSWriter, GWTCWriter
+from repro.exec.writer import GWDSWriter, GWTCWriter, journal_path
 
 __all__ = [
     "ArraySource",
@@ -33,6 +33,7 @@ __all__ = [
     "TileCache",
     "TileSource",
     "as_source",
+    "journal_path",
     "plan_stream",
     "stream_compress",
 ]

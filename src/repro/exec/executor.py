@@ -14,6 +14,16 @@ tracked peak within it.
 accounts the executor-owned buffers exactly (batch input, payload leaves,
 reservoir), where process-level ``ru_maxrss`` is polluted by allocator and
 JIT baselines.  Both land in the :class:`StreamReport`.
+
+Fault tolerance (docs/ROBUSTNESS.md): the device encode and the host
+append both run under a :class:`~repro.runtime.fault.RetryPolicy` — a
+transient ``RuntimeError``/``OSError`` is retried with backoff instead of
+killing the stream (``injector``/``write_injector`` hooks let tests drive
+deterministic fault schedules through the real code paths).  Each batch's
+lanes are journaled by :meth:`GWTCWriter.commit` once appended, so an
+exhausted retry leaves a *resumable* partial container behind
+(``resume=True`` picks up from the first uncommitted batch) rather than
+unlinking the work done so far.
 """
 from __future__ import annotations
 
@@ -21,13 +31,14 @@ import os
 import resource
 import threading
 from concurrent.futures import ThreadPoolExecutor
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
 from repro.exec.plan import StreamPlan, plan_stream
 from repro.exec.sources import TileSource, as_source, value_range
 from repro.exec.writer import GWTCWriter
+from repro.runtime.fault import RetryPolicy
 
 
 class MemTracker:
@@ -67,6 +78,11 @@ class StreamReport:
     ru_maxrss_kb: int
     enhanced: bool = False
     reservoir_tiles: int = 0
+    # fault-tolerance accounting: total retried attempts, the batch indices
+    # that needed at least one retry, and how many batches a resume skipped
+    retries: int = 0
+    failed_batches: tuple[int, ...] = field(default_factory=tuple)
+    resumed_batches: int = 0
 
     @property
     def peak_over_budget(self) -> float:
@@ -128,6 +144,10 @@ def stream_compress(
     reservoir_tiles: int | None = None,
     shape=None,
     use_pallas: bool | None = None,
+    retry: RetryPolicy | None = None,
+    resume: bool = False,
+    injector=None,
+    write_injector=None,
 ) -> StreamReport:
     """Compress a streamed volume into a ``GWTC`` v3 container.
 
@@ -138,12 +158,22 @@ def stream_compress(
     (recon, residual) tile pairs — the bounded-memory stand-in for the
     eager path's whole-volume training set — and attaches the model before
     the footer is written.  Returns a :class:`StreamReport`; open the
-    artifact with ``api.open`` (lazily — only decoded lanes are read)."""
+    artifact with ``api.open`` (lazily — only decoded lanes are read).
+
+    ``retry`` (default :class:`RetryPolicy()`) governs both the device
+    encode and the host append; ``resume=True`` re-opens an interrupted
+    path destination at its journaled commit point and streams only the
+    uncommitted batches (Lorenzo resume is byte-identical to an
+    uninterrupted run).  ``injector`` / ``write_injector`` are
+    :class:`~repro.runtime.fault.FailureInjector` hooks for tests: the
+    first fires per batch index inside the device encode, the second per
+    global lane id inside the host append."""
     import jax
 
     from repro.sz.predictor import get_predictor
     from repro.sz.tiled import normalize_tile
 
+    retry = retry if retry is not None else RetryPolicy()
     src = as_source(source, shape=shape)
     tile = normalize_tile(tile, len(src.shape))
     eb = _resolve_eb_streaming(src, rel_eb, abs_eb)
@@ -151,25 +181,45 @@ def stream_compress(
     levels = pred.plan(tile, max_levels)
     plan = plan_stream(src.shape, tile, mem_budget, predictor=predictor,
                        levels=levels)
+    want = (plan.shape, plan.tile, eb, backend, predictor, order, levels)
 
-    if isinstance(dest, GWTCWriter):
+    start_tile, resumed_batches = 0, 0
+    if resume:
+        if enhance:
+            raise ValueError(
+                "resume=True cannot train enhancers: the reservoir would "
+                "sample only the re-streamed batches, so the attached model "
+                "(and the container bytes) would depend on where the "
+                "interruption fell — re-run without resume to enhance")
+        if isinstance(dest, GWTCWriter) or hasattr(dest, "write"):
+            raise ValueError("resume=True needs a path destination "
+                             "(the commit journal lives next to the file)")
+        writer, path = GWTCWriter.resume(dest), str(dest)
+        aligned = plan.resume_point(writer.committed_lanes)
+        if aligned != writer.committed_lanes:
+            writer.truncate_lanes(aligned)  # mid-batch commit: redo the batch
+        start_tile = aligned
+        resumed_batches = start_tile // plan.batch_tiles
+    elif isinstance(dest, GWTCWriter):
         # a pre-made writer already wrote its header; every header field must
         # agree with how the lanes will actually be encoded, or the container
         # would self-describe a decode that does not match its bytes
         writer, path = dest, None
-        wrote = (writer.shape, writer.tile, writer.eb_abs, writer.backend,
-                 writer.predictor, writer.order, writer.levels)
-        want = (plan.shape, plan.tile, eb, backend, predictor, order, levels)
-        if wrote != want:
-            raise ValueError(
-                f"writer header {wrote} does not match the encode settings "
-                f"{want} (shape, tile, eb_abs, backend, predictor, order, "
-                "levels must agree)")
     else:
         path = None if hasattr(dest, "write") else str(dest)
         writer = GWTCWriter(dest, shape=plan.shape, tile=plan.tile, eb_abs=eb,
                             backend=backend, predictor=predictor, order=order,
                             levels=levels)
+    if resume or isinstance(dest, GWTCWriter):
+        wrote = (writer.shape, writer.tile, writer.eb_abs, writer.backend,
+                 writer.predictor, writer.order, writer.levels)
+        if wrote != want:
+            if resume:
+                writer.abort()
+            raise ValueError(
+                f"writer header {wrote} does not match the encode settings "
+                f"{want} (shape, tile, eb_abs, backend, predictor, order, "
+                "levels must agree)")
 
     reservoir = None
     if enhance:
@@ -184,17 +234,46 @@ def stream_compress(
     mem = MemTracker()
     pool = ThreadPoolExecutor(1, thread_name_prefix="gwtc-host")
     pending = None
+    # retry accounting, shared between the main thread (device stage) and
+    # the host worker — on_retry callbacks from both land here
+    fault_lock = threading.Lock()
+    retries = 0
+    failed_batches: set[int] = set()
 
-    def host_stage(payload_np, n_real: int, nbytes_held: int) -> None:
+    def note_retry(bidx: int):
+        def cb(_exc, _attempt):
+            nonlocal retries
+            with fault_lock:
+                retries += 1
+                failed_batches.add(bidx)
+        return cb
+
+    def host_stage(payload_np, ids, bidx: int, nbytes_held: int) -> None:
         try:
-            for j in range(n_real):
-                writer.append_lane(pred.lane_bytes(payload_np, j, backend))
+            def append_batch():
+                if writer.can_rollback:
+                    # drop any half-appended lanes from a previous attempt so
+                    # the retry replays the whole batch from the commit point
+                    writer.rollback_uncommitted()
+                for j in range(len(ids)):
+                    if write_injector is not None:
+                        write_injector.maybe_fail(ids[j])
+                    writer.append_lane(pred.lane_bytes(payload_np, j, backend))
+                writer.commit()
+
+            if writer.can_rollback:
+                retry.run(append_batch, on_retry=note_retry(bidx))
+            else:
+                append_batch()  # shared sink: no safe replay, fail fast
         finally:
             mem.sub(nbytes_held)
 
     try:
-        for run in plan.batches():
+        for bidx, run in enumerate(plan.batches(start_tile),
+                                   start=resumed_batches):
             ids = list(run)
+            # the batch read stays OUTSIDE the retry scope: sources are
+            # forward-only streams, a re-read is not generally possible
             batch = _read_batch(src, ids, plan)
             # same f32-overflow guard as quantizer.resolve_eb, applied to the
             # data actually seen (an abs_eb stream takes no range prepass)
@@ -204,8 +283,14 @@ def stream_compress(
                     f"eb={eb:g} too small for data magnitude "
                     f"(q={max_q:.3g} >= 2^30)")
             mem.add(batch.nbytes)
-            payload, recon = pred.encode_tiles(
-                batch, eb, order=order, levels=levels, use_pallas=use_pallas)
+
+            def encode():
+                if injector is not None:
+                    injector.maybe_fail(bidx)
+                return pred.encode_tiles(batch, eb, order=order,
+                                         levels=levels, use_pallas=use_pallas)
+
+            payload, recon = retry.run(encode, on_retry=note_retry(bidx))
             payload_np = jax.tree.map(np.asarray, payload)
             held = sum(leaf.nbytes for leaf in jax.tree.leaves(payload_np))
             mem.add(held)
@@ -220,7 +305,7 @@ def stream_compress(
             del batch
             if pending is not None:
                 pending.result()  # cap in-flight host work at one batch
-            pending = pool.submit(host_stage, payload_np, len(ids), held)
+            pending = pool.submit(host_stage, payload_np, ids, bidx, held)
             del payload, payload_np
         if pending is not None:
             pending.result()
@@ -239,22 +324,27 @@ def stream_compress(
         if pending is not None:  # drain the worker before touching the sink
             try:
                 pending.result()
-            except Exception:
+            # the worker can only fail the ways the append path fails; a
+            # propagating exception here would mask the original error
+            except (OSError, RuntimeError, ValueError):
                 pass
             pending = None
         if not isinstance(dest, GWTCWriter):
+            journaled = writer._journal_path is not None
             writer.abort()  # close the fd; no footer = detectably truncated
-            if path is not None:
+            if path is not None and not journaled:
                 try:
                     os.unlink(path)  # don't leave a garbage container behind
                 except OSError:
                     pass
+            # journaled path dests keep the partial container + journal on
+            # disk: that pair is exactly what resume=True needs
         raise
     finally:
         if pending is not None:  # a failed batch: drain the worker first
             try:
                 pending.result()
-            except Exception:
+            except (OSError, RuntimeError, ValueError):
                 pass
         pool.shutdown(wait=True)
         src.close()
@@ -267,4 +357,7 @@ def stream_compress(
         ru_maxrss_kb=int(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss),
         enhanced=enhanced,
         reservoir_tiles=len(reservoir) if reservoir is not None else 0,
+        retries=retries,
+        failed_batches=tuple(sorted(failed_batches)),
+        resumed_batches=resumed_batches,
     )

@@ -46,10 +46,29 @@ class StreamPlan:
     def n_batches(self) -> int:
         return -(-self.n_tiles // self.batch_tiles)
 
-    def batches(self):
-        """Contiguous row-major id runs: range(a, b) per batch."""
-        for a in range(0, self.n_tiles, self.batch_tiles):
+    def batches(self, start_tile: int = 0):
+        """Contiguous row-major id runs: range(a, b) per batch.
+
+        ``start_tile`` (a batch-aligned tile id, see :meth:`resume_point`)
+        skips the already-committed prefix when resuming an interrupted
+        stream — the remaining runs are exactly the ones an uninterrupted
+        stream would have produced."""
+        if start_tile % self.batch_tiles:
+            raise ValueError(
+                f"start_tile {start_tile} is not aligned to the batch width "
+                f"{self.batch_tiles}")
+        for a in range(start_tile, self.n_tiles, self.batch_tiles):
             yield range(a, min(a + self.batch_tiles, self.n_tiles))
+
+    def resume_point(self, committed_lanes: int) -> int:
+        """Round a writer's commit point *down* to a batch boundary.
+
+        Resume must re-encode whole batches (the device program and the
+        reservoir-free entropy stage are deterministic per batch), so a
+        commit landing mid-batch surrenders the partial batch and restarts
+        it — the price of byte-identical output."""
+        committed_lanes = min(int(committed_lanes), self.n_tiles)
+        return (committed_lanes // self.batch_tiles) * self.batch_tiles
 
 
 def plan_stream(

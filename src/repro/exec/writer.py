@@ -9,14 +9,28 @@ file.  ``GWTC`` v3 and ``GWDS`` v2 are exactly these layouts
 ``TiledCompressed._serialize`` / ``Dataset.build`` paths route through the
 same writers so eager and streamed bytes are identical for identical
 content.
+
+Fault tolerance (docs/ROBUSTNESS.md): when the destination is a *path*, the
+``GWTC`` writer keeps a sidecar commit journal (``<path>.journal``) —
+:meth:`GWTCWriter.commit` durably records the lanes appended so far (data
+file is fsync'd *before* the journal entry lands, so a journaled lane is
+always really on disk), :meth:`GWTCWriter.rollback_uncommitted` truncates a
+half-appended batch away so it can be retried, and
+:meth:`GWTCWriter.resume` re-opens an interrupted container at its last
+committed byte.  :meth:`finalize` removes the journal — a surviving journal
+file is exactly the marker of an interrupted stream.  Every lane's CRC32
+is tracked as it is appended and lands in the v3 footer index
+(``sz/tiled.py``) for end-to-end integrity checking on decode.
 """
 from __future__ import annotations
 
 import os
 import struct
+import zlib
 
 import numpy as np
 
+from repro.errors import CorruptContainerError
 from repro.sz import tiled as T
 
 _GWDS_MAGIC = b"GWDS"
@@ -28,16 +42,88 @@ _GWDS_HDR = struct.Struct("<4sB3xI")
 _GWDS_FOOTER = struct.Struct("<QI4s")
 _GWDS_SENTINEL = b"GWDX"
 
+# --- commit journal (sidecar <path>.journal) --------------------------------
+# header:  magic 'GWJL', version, pad, prefix_len u32, prefix bytes, crc u32
+#          (prefix = the container's header|shape|tile bytes, so resume can
+#          verify it is appending to the stream it thinks it is)
+# blocks:  n_new u32 | n_new x (lane_len u64, lane_crc u32) | committed u64
+#          | block crc u32 — one block per commit(); a torn tail block (crash
+#          mid-append) fails its CRC and is ignored, the previous block wins.
+_JOURNAL_MAGIC = b"GWJL"
+_JOURNAL_VERSION = 1
+_JOURNAL_HDR = struct.Struct("<4sB3xI")
+_LANE_ENTRY = struct.Struct("<QI")
+
+
+def journal_path(path) -> str:
+    return os.fspath(path) + ".journal"
+
+
+def _read_journal(jpath):
+    """Parse a commit journal -> (prefix, lens, crcs, committed_bytes).
+
+    Walks commit blocks until EOF or the first torn/corrupt block; the
+    state as of the last intact block is returned.  Raises
+    :class:`CorruptContainerError` when the journal itself is unusable."""
+    with open(jpath, "rb") as f:
+        blob = f.read()
+    try:
+        magic, ver, prefix_len = _JOURNAL_HDR.unpack_from(blob, 0)
+    except struct.error as e:
+        raise CorruptContainerError(
+            f"truncated commit journal {jpath}: {e}", offset=0) from e
+    if magic != _JOURNAL_MAGIC or ver != _JOURNAL_VERSION:
+        raise CorruptContainerError(
+            "bad commit journal header", offset=0,
+            expected=(_JOURNAL_MAGIC, _JOURNAL_VERSION),
+            actual=(bytes(magic), int(ver)))
+    off = _JOURNAL_HDR.size
+    prefix = blob[off : off + prefix_len]
+    off += prefix_len
+    try:
+        (pcrc,) = struct.unpack_from("<I", blob, off)
+    except struct.error as e:
+        raise CorruptContainerError(
+            f"truncated commit journal {jpath} (no prefix crc)",
+            offset=off) from e
+    off += 4
+    if len(prefix) != prefix_len or zlib.crc32(prefix) & 0xFFFFFFFF != pcrc:
+        raise CorruptContainerError(
+            "commit journal prefix failed its checksum", offset=_JOURNAL_HDR.size)
+    lens: list[int] = []
+    crcs: list[int] = []
+    committed = len(prefix)
+    while off < len(blob):
+        block_start = off
+        try:
+            (n_new,) = struct.unpack_from("<I", blob, off)
+            off += 4
+            entries = [_LANE_ENTRY.unpack_from(blob, off + i * _LANE_ENTRY.size)
+                       for i in range(n_new)]
+            off += n_new * _LANE_ENTRY.size
+            (total,) = struct.unpack_from("<Q", blob, off)
+            off += 8
+            (bcrc,) = struct.unpack_from("<I", blob, off)
+            off += 4
+        except struct.error:
+            break  # torn tail block from a crash mid-append: previous wins
+        if zlib.crc32(blob[block_start : off - 4]) & 0xFFFFFFFF != bcrc:
+            break
+        lens.extend(int(ln) for ln, _c in entries)
+        crcs.extend(int(c) for _ln, c in entries)
+        committed = int(total)
+    return bytes(prefix), lens, crcs, committed
+
 
 class _Dest:
     """Append-only byte sink over a path or file-like; tracks bytes written
     relative to the container start (NOT the file start — a GWTC container
     embedded as a GWDS field needs container-relative footer offsets)."""
 
-    def __init__(self, dest):
+    def __init__(self, dest, *, own: bool | None = None):
         if hasattr(dest, "write"):
             self._f = dest
-            self._own = False
+            self._own = bool(own)
         else:
             self._f = open(os.fspath(dest), "wb")
             self._own = True
@@ -46,6 +132,23 @@ class _Dest:
     def write(self, b) -> None:
         self._f.write(b)
         self.written += len(b)
+
+    def fsync(self) -> None:
+        """Flush to the OS and (for real files) to the device — called
+        before a journal commit so committed lanes are durably on disk."""
+        self._f.flush()
+        try:
+            os.fsync(self._f.fileno())
+        except (OSError, AttributeError):
+            pass  # BytesIO / pipes: flush is all the durability there is
+
+    def truncate(self, n: int) -> None:
+        """Drop everything past byte ``n`` (file-absolute) and reposition —
+        the rollback primitive for retrying a half-appended batch."""
+        self._f.flush()
+        self._f.truncate(n)
+        self._f.seek(n)
+        self.written = n
 
     def close(self) -> None:
         if self._own:
@@ -59,11 +162,19 @@ class GWTCWriter:
     The tile geometry (and therefore the lane count) is fixed at
     construction; :meth:`finalize` refuses a partial container.  ``extras``
     is a plain dict — attach entries (e.g. a trained GWLZ model under
-    ``"gwlz"``) any time before finalize."""
+    ``"gwlz"``) any time before finalize.
+
+    Path destinations are *journaled*: each :meth:`commit` fsyncs the data
+    file then appends a checksummed block to ``<path>.journal``, making the
+    committed prefix durable and :meth:`resume`-able; :meth:`finalize`
+    deletes the journal.  In-memory / shared sinks write no journal but
+    still track the commit point so :meth:`rollback_uncommitted` works
+    wherever the sink supports truncation."""
 
     def __init__(self, dest, *, shape, tile, eb_abs: float,
                  backend: str = "huffman+zlib", predictor: str = "lorenzo",
-                 order: str = "cubic", levels: int = 0, on_finalize=None):
+                 order: str = "cubic", levels: int = 0, on_finalize=None,
+                 journal: bool | None = None):
         from repro.sz.predictor import ORDER_IDS, PRED_IDS
 
         shape = tuple(int(d) for d in shape)
@@ -75,11 +186,16 @@ class GWTCWriter:
         self.order, self.levels = order, int(levels)
         self.extras: dict = {}
         self._lens: list[int] = []
+        self._crcs: list[int] = []
         self._on_finalize = on_finalize
         # sharing an existing sink (a GWDS envelope streaming this container
         # as a field) keeps ITS byte counter advancing; footer offsets are
         # container-relative either way, via the base mark
         self._shared = isinstance(dest, _Dest)
+        is_path = not self._shared and not hasattr(dest, "write")
+        self._journal_path = journal_path(dest) \
+            if (journal if journal is not None else is_path) and is_path else None
+        self._journal_f = None
         self._dest = dest if self._shared else _Dest(dest)
         self._base = self._dest.written
         self._finalized = False
@@ -88,13 +204,36 @@ class GWTCWriter:
                              PRED_IDS[predictor], ORDER_IDS[order], int(levels),
                              0, np.float64(self.eb_abs).view(np.uint64),
                              self.n_tiles)
-        self._dest.write(hdr)
-        self._dest.write(struct.pack(f"<{nd}q", *shape))
-        self._dest.write(struct.pack(f"<{nd}q", *tile))
+        self._prefix = (hdr + struct.pack(f"<{nd}q", *shape)
+                        + struct.pack(f"<{nd}q", *tile))
+        self._dest.write(self._prefix)
+        # everything up to and including the fixed prefix counts as committed
+        self._committed_lanes = 0
+        self._committed_bytes = len(self._prefix)
+        if self._journal_path is not None:
+            self._journal_f = open(self._journal_path, "wb")
+            self._journal_f.write(
+                _JOURNAL_HDR.pack(_JOURNAL_MAGIC, _JOURNAL_VERSION,
+                                  len(self._prefix))
+                + self._prefix
+                + struct.pack("<I", zlib.crc32(self._prefix) & 0xFFFFFFFF))
+            self._journal_f.flush()
 
     @property
     def lanes_written(self) -> int:
         return len(self._lens)
+
+    @property
+    def committed_lanes(self) -> int:
+        """Lanes durably recorded by the last :meth:`commit` — a resumed
+        stream restarts from exactly this point."""
+        return self._committed_lanes
+
+    @property
+    def can_rollback(self) -> bool:
+        """Whether :meth:`rollback_uncommitted` is available (owned sinks
+        only — a shared GWDS envelope cannot be truncated mid-field)."""
+        return not self._shared
 
     def append_lane(self, lane) -> None:
         if self._finalized:
@@ -105,24 +244,160 @@ class GWTCWriter:
                 "does not fit")
         lane = bytes(lane)
         self._lens.append(len(lane))
+        self._crcs.append(zlib.crc32(lane) & 0xFFFFFFFF)
         self._dest.write(lane)
 
+    def commit(self) -> None:
+        """Durably record every lane appended so far.
+
+        Ordering matters: the data file is fsync'd *first*, then the journal
+        block is appended and flushed — a journal entry therefore never
+        refers to bytes that might not have reached the disk."""
+        if self._finalized:
+            raise ValueError("writer already finalized")
+        n_new = len(self._lens) - self._committed_lanes
+        if n_new <= 0:
+            return
+        self._dest.fsync()
+        self._committed_lanes = len(self._lens)
+        self._committed_bytes = len(self._prefix) + sum(self._lens)
+        if self._journal_f is not None:
+            block = struct.pack("<I", n_new)
+            for i in range(self._committed_lanes - n_new, self._committed_lanes):
+                block += _LANE_ENTRY.pack(self._lens[i], self._crcs[i])
+            block += struct.pack("<Q", self._committed_bytes)
+            block += struct.pack("<I", zlib.crc32(block) & 0xFFFFFFFF)
+            self._journal_f.write(block)
+            self._journal_f.flush()
+            os.fsync(self._journal_f.fileno())
+
+    def rollback_uncommitted(self) -> int:
+        """Truncate everything after the last commit point (a half-appended
+        batch being retried); returns the number of lanes dropped."""
+        if self._finalized:
+            raise ValueError("writer already finalized")
+        if self._shared:
+            raise ValueError("cannot roll back a writer on a shared sink")
+        dropped = len(self._lens) - self._committed_lanes
+        if dropped:
+            del self._lens[self._committed_lanes:]
+            del self._crcs[self._committed_lanes:]
+            self._dest.truncate(self._base + self._committed_bytes)
+        return dropped
+
+    def truncate_lanes(self, n: int) -> None:
+        """Shrink the *committed* stream to its first ``n`` lanes (resume
+        alignment: a commit point mid-batch is rounded down to a batch
+        boundary so the re-streamed batches reproduce the original bytes)."""
+        if self._shared:
+            raise ValueError("cannot truncate a writer on a shared sink")
+        if not 0 <= n <= self._committed_lanes:
+            raise ValueError(
+                f"cannot truncate to {n} lanes; {self._committed_lanes} committed")
+        del self._lens[n:]
+        del self._crcs[n:]
+        self._committed_lanes = n
+        self._committed_bytes = len(self._prefix) + sum(self._lens)
+        self._dest.truncate(self._base + self._committed_bytes)
+        if self._journal_f is not None:
+            # rewrite the journal from scratch: header + one block
+            self._journal_f.close()
+            self._journal_f = open(self._journal_path, "wb")
+            self._journal_f.write(
+                _JOURNAL_HDR.pack(_JOURNAL_MAGIC, _JOURNAL_VERSION,
+                                  len(self._prefix))
+                + self._prefix
+                + struct.pack("<I", zlib.crc32(self._prefix) & 0xFFFFFFFF))
+            self._journal_f.flush()
+            self._committed_lanes = 0  # re-journal the kept lanes as one block
+            self.commit() if n else self._journal_f.flush()
+            self._committed_lanes = n
+
+    @classmethod
+    def resume(cls, path) -> "GWTCWriter":
+        """Re-open an interrupted journaled stream at its last commit point.
+
+        Validates that the data file still begins with the journaled
+        container prefix and holds at least the committed bytes, truncates
+        any uncommitted tail, and returns a writer positioned to append
+        lane ``committed_lanes`` next.  Raises
+        :class:`CorruptContainerError` when the file and journal disagree."""
+        from repro.sz.predictor import ORDER_NAMES, PRED_NAMES
+
+        jpath = journal_path(path)
+        if not os.path.exists(jpath):
+            raise FileNotFoundError(
+                f"no commit journal at {jpath}; nothing to resume")
+        prefix, lens, crcs, committed = _read_journal(jpath)
+        (_m, _v, nd, backend, pred, order, levels, _pad, ebbits,
+         _n_tiles) = T._HDR_V3.unpack_from(prefix, 0)
+        shape = struct.unpack_from(f"<{nd}q", prefix, T._HDR_V3.size)
+        tile = struct.unpack_from(f"<{nd}q", prefix, T._HDR_V3.size + 8 * nd)
+        f = open(os.fspath(path), "r+b")
+        try:
+            head = f.read(len(prefix))
+            if head != prefix:
+                raise CorruptContainerError(
+                    "container prefix does not match its commit journal "
+                    "(wrong file, or header bytes were damaged)", offset=0)
+            f.seek(0, 2)
+            size = f.tell()
+            if size < committed:
+                raise CorruptContainerError(
+                    "container is shorter than its journaled commit point",
+                    offset=size, expected=f">= {committed} bytes", actual=size)
+        except BaseException:
+            f.close()
+            raise
+        f.truncate(committed)
+        f.seek(committed)
+        self = cls.__new__(cls)
+        self.shape, self.tile = tuple(map(int, shape)), tuple(map(int, tile))
+        self.n_tiles = int(np.prod(T.tile_grid(self.shape, self.tile)))
+        self.eb_abs = float(np.uint64(ebbits).view(np.float64))
+        self.backend = T._BACKENDS_INV[backend]
+        self.predictor, self.order = PRED_NAMES[pred], ORDER_NAMES[order]
+        self.levels = int(levels)
+        self.extras = {}
+        self._lens, self._crcs = list(lens), list(crcs)
+        self._on_finalize = None
+        self._shared = False
+        self._journal_path = jpath
+        self._journal_f = open(jpath, "ab")
+        self._dest = _Dest(f, own=True)
+        self._dest.written = committed
+        self._base = 0
+        self._finalized = False
+        self._prefix = prefix
+        self._committed_lanes = len(lens)
+        self._committed_bytes = committed
+        return self
+
     def finalize(self) -> int:
-        """Write extras + index + footer; returns total container bytes."""
+        """Write extras + index (lens | lane CRCs | metadata CRC) + footer;
+        removes the commit journal; returns total container bytes."""
         if self._finalized:
             raise ValueError("writer already finalized")
         if len(self._lens) != self.n_tiles:
             raise ValueError(
                 f"container needs {self.n_tiles} lanes, got {len(self._lens)}")
         extras_off = self._dest.written - self._base
-        self._dest.write(T._pack_extras(self.extras))
+        extras_blob = T._pack_extras(self.extras)
+        self._dest.write(extras_blob)
         index_off = self._dest.written - self._base
         self._dest.write(np.asarray(self._lens, np.uint64).tobytes())
+        self._dest.write(np.asarray(self._crcs, np.uint32).tobytes())
+        meta_crc = zlib.crc32(extras_blob, zlib.crc32(self._prefix)) & 0xFFFFFFFF
+        self._dest.write(struct.pack("<I", meta_crc))
         self._dest.write(T._FOOTER_V3.pack(extras_off, index_off))
         self._finalized = True
         total = self._dest.written - self._base
         if not self._shared:
             self._dest.close()
+        if self._journal_f is not None:
+            self._journal_f.close()
+            self._journal_f = None
+            os.unlink(self._journal_path)
         if self._on_finalize is not None:
             self._on_finalize(total)
         return total
@@ -130,7 +405,11 @@ class GWTCWriter:
     def abort(self) -> None:
         """Give up on a partial container: close the sink (when owned)
         without writing a footer.  The bytes on disk are unreadable by
-        design — a missing footer is how a truncated stream is detected."""
+        design — a missing footer is how a truncated stream is detected.
+        A journaled writer keeps its journal: the pair stays resumable."""
+        if self._journal_f is not None:
+            self._journal_f.close()
+            self._journal_f = None
         if not self._finalized and not self._shared:
             self._dest.close()
 
@@ -231,25 +510,40 @@ def parse_gwds_v2(blob) -> dict[str, tuple[int, int]]:
     Accepts any buffer (bytes or a memoryview over an mmap); only the
     header, footer, and index bytes are touched."""
     if len(blob) < _GWDS_HDR.size + _GWDS_FOOTER.size:
-        raise ValueError("truncated GWDS v2 envelope")
+        raise CorruptContainerError(
+            "truncated GWDS v2 envelope", offset=0,
+            expected=f">= {_GWDS_HDR.size + _GWDS_FOOTER.size} bytes",
+            actual=len(blob))
     index_off, n_fields, sentinel = _GWDS_FOOTER.unpack_from(
         blob, len(blob) - _GWDS_FOOTER.size)
     if sentinel != _GWDS_SENTINEL:
-        raise ValueError("truncated or corrupt GWDS v2 envelope (bad footer)")
+        raise CorruptContainerError(
+            "truncated or corrupt GWDS v2 envelope (bad footer)",
+            offset=len(blob) - 4, expected=_GWDS_SENTINEL,
+            actual=bytes(sentinel))
     if index_off > len(blob) - _GWDS_FOOTER.size:
-        raise ValueError("corrupt GWDS v2 envelope (index offset out of range)")
+        raise CorruptContainerError(
+            "corrupt GWDS v2 envelope (index offset out of range)",
+            offset=len(blob) - _GWDS_FOOTER.size,
+            expected=f"<= {len(blob) - _GWDS_FOOTER.size}",
+            actual=int(index_off))
     index: dict[str, tuple[int, int]] = {}
     off = index_off
-    for _ in range(n_fields):
-        (nlen,) = struct.unpack_from("<I", blob, off)
-        off += 4
-        name = bytes(blob[off : off + nlen]).decode()
-        off += nlen
-        fo, fl = struct.unpack_from("<QQ", blob, off)
-        off += 16
-        if fo + fl > index_off:
-            raise ValueError(
-                f"GWDS field {name!r} extends past the payload "
-                f"({fo}+{fl} > {index_off}): truncated file?")
-        index[name] = (int(fo), int(fl))
+    try:
+        for _ in range(n_fields):
+            (nlen,) = struct.unpack_from("<I", blob, off)
+            off += 4
+            name = bytes(blob[off : off + nlen]).decode()
+            off += nlen
+            fo, fl = struct.unpack_from("<QQ", blob, off)
+            off += 16
+            if fo + fl > index_off:
+                raise CorruptContainerError(
+                    f"GWDS field {name!r} extends past the payload: "
+                    "truncated file?", offset=off - 16,
+                    expected=f"<= {int(index_off)}", actual=int(fo + fl))
+            index[name] = (int(fo), int(fl))
+    except struct.error as e:
+        raise CorruptContainerError(
+            f"truncated GWDS v2 index: {e}", offset=int(index_off)) from e
     return index

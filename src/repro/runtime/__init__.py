@@ -1,5 +1,10 @@
 from repro.runtime.elastic import plan_remesh, reshard_restore
-from repro.runtime.fault import FailureInjector, HeartbeatMonitor, ResilientLoop
+from repro.runtime.fault import (
+    FailureInjector,
+    HeartbeatMonitor,
+    ResilientLoop,
+    RetryPolicy,
+)
 
 __all__ = [
     "plan_remesh",
@@ -7,4 +12,5 @@ __all__ = [
     "FailureInjector",
     "HeartbeatMonitor",
     "ResilientLoop",
+    "RetryPolicy",
 ]

@@ -20,6 +20,8 @@ from __future__ import annotations
 
 from typing import Protocol, runtime_checkable
 
+from repro.errors import CorruptContainerError
+
 MAGIC_LEN = 4
 
 
@@ -62,17 +64,23 @@ def container_magics() -> dict[bytes, type]:
 
 def sniff_magic(blob: bytes) -> bytes:
     if len(blob) < MAGIC_LEN:
-        raise ValueError(f"blob too short to hold a container magic ({len(blob)} bytes)")
+        raise CorruptContainerError(
+            "blob too short to hold a container magic", offset=0,
+            expected=f">= {MAGIC_LEN} bytes", actual=len(blob))
     return bytes(blob[:MAGIC_LEN])
 
 
 def from_bytes(blob: bytes) -> Artifact:
-    """Reconstruct whichever artifact the blob's magic names."""
+    """Reconstruct whichever artifact the blob's magic names.
+
+    Corrupt input raises :class:`repro.errors.CorruptContainerError` (a
+    ``ValueError`` subclass) from the sniff or the container's own parser."""
     magic = sniff_magic(blob)
     cls = _CONTAINERS.get(magic)
     if cls is None:
         known = ", ".join(sorted(m.decode("ascii", "replace") for m in _CONTAINERS))
-        raise ValueError(
-            f"unknown container magic {magic!r} (registered: {known}; "
-            f"multi-field GWDS datasets open through repro.api.open)")
+        raise CorruptContainerError(
+            f"unknown container magic (registered: {known}; "
+            f"multi-field GWDS datasets open through repro.api.open)",
+            offset=0, actual=bytes(magic))
     return cls.from_bytes(blob)

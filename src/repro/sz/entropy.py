@@ -108,11 +108,14 @@ def _canonical_codes(lengths: np.ndarray) -> np.ndarray:
 
 
 def _accel_default() -> bool:
+    # jax missing entirely or unable to initialize a backend means "no
+    # accelerator" — anything else (KeyboardInterrupt, a typo'd plugin
+    # import raising AttributeError, ...) is a real bug and must propagate
     try:
         import jax
 
         return jax.default_backend() == "tpu"
-    except Exception:
+    except (ImportError, RuntimeError):
         return False
 
 

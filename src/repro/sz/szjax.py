@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.errors import CorruptContainerError
 from repro.sz import artifact as A
 from repro.sz import predictor as P
 from repro.sz.entropy import decode_codes, encode_codes
@@ -112,33 +113,47 @@ class SZCompressed:
         # read lazily — and owning plain bytes lets the mmap close under it
         if not isinstance(blob, (bytes, bytearray)):
             blob = bytes(blob)
-        magic, ndim, pred, order, levels, ebbits = _HDR.unpack_from(blob, 0)
-        assert magic == _MAGIC, "bad SZJX blob"
-        off = _HDR.size
-        shape = struct.unpack_from(f"<{ndim}q", blob, off)
-        off += 8 * ndim
-        pshape = struct.unpack_from(f"<{ndim}q", blob, off)
-        off += 8 * ndim
-        n_out, out_len = struct.unpack_from("<QQ", blob, off)
-        off += 16
-        raw = zlib.decompress(blob[off : off + out_len])
-        off += out_len
-        oidx = np.frombuffer(raw, np.int64, n_out).copy()
-        oval = np.frombuffer(raw, np.float32, n_out, offset=8 * n_out).copy()
-        (clen,) = struct.unpack_from("<Q", blob, off)
-        off += 8
-        code_blob = blob[off : off + clen]
-        off += clen
-        (n_extras,) = struct.unpack_from("<I", blob, off)
-        off += 4
-        extras = {}
-        for _ in range(n_extras):
-            klen, vlen = struct.unpack_from("<II", blob, off)
+        try:
+            magic, ndim, pred, order, levels, ebbits = _HDR.unpack_from(blob, 0)
+            if magic != _MAGIC:
+                raise CorruptContainerError(
+                    "bad SZJX magic", offset=0, expected=_MAGIC,
+                    actual=bytes(magic))
+            if pred not in _PRED_INV or order not in _ORD_INV:
+                raise CorruptContainerError(
+                    "unknown SZJX predictor/order id", offset=6,
+                    actual=(int(pred), int(order)))
+            off = _HDR.size
+            shape = struct.unpack_from(f"<{ndim}q", blob, off)
+            off += 8 * ndim
+            pshape = struct.unpack_from(f"<{ndim}q", blob, off)
+            off += 8 * ndim
+            n_out, out_len = struct.unpack_from("<QQ", blob, off)
+            off += 16
+            raw = zlib.decompress(blob[off : off + out_len])
+            off += out_len
+            oidx = np.frombuffer(raw, np.int64, n_out).copy()
+            oval = np.frombuffer(raw, np.float32, n_out, offset=8 * n_out).copy()
+            (clen,) = struct.unpack_from("<Q", blob, off)
             off += 8
-            k = blob[off : off + klen].decode()
-            off += klen
-            extras[k] = blob[off : off + vlen]
-            off += vlen
+            code_blob = blob[off : off + clen]
+            off += clen
+            (n_extras,) = struct.unpack_from("<I", blob, off)
+            off += 4
+            extras = {}
+            for _ in range(n_extras):
+                klen, vlen = struct.unpack_from("<II", blob, off)
+                off += 8
+                k = blob[off : off + klen].decode()
+                off += klen
+                extras[k] = blob[off : off + vlen]
+                off += vlen
+        except struct.error as e:
+            raise CorruptContainerError(
+                f"truncated SZJX blob: {e}", offset=0) from e
+        except zlib.error as e:
+            raise CorruptContainerError(
+                f"corrupt SZJX outlier stream: {e}", offset=_HDR.size) from e
         return SZCompressed(
             shape=tuple(shape),
             padded_shape=tuple(pshape),
@@ -165,7 +180,9 @@ class SZCompressor:
 
     def __init__(self, predictor: str = "interp", order: str = "cubic",
                  backend: str = "huffman+zlib", max_levels: int = 5):
-        assert predictor in _PRED and order in _ORD
+        if predictor not in _PRED or order not in _ORD:
+            raise ValueError(f"unknown predictor/order {predictor!r}/{order!r} "
+                             f"(predictors: {sorted(_PRED)}, orders: {sorted(_ORD)})")
         self.predictor = predictor
         self.order = order
         self.backend = backend

@@ -28,6 +28,7 @@ from __future__ import annotations
 import os
 import struct
 import threading
+import zlib
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 
@@ -35,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.errors import CorruptContainerError, CorruptLaneError
 from repro.sz import artifact as A
 from repro.sz.predictor import ORDER_IDS, ORDER_NAMES, PRED_IDS, PRED_NAMES, get_predictor
 from repro.sz.quantizer import resolve_eb
@@ -50,11 +52,27 @@ _HDR_V2 = struct.Struct("<4sBBBBBBBQQ")
 # the lanes so the container can be written append-only by a streaming
 # encoder; a fixed-size footer at the end of the blob locates them
 # (docs/STREAMING.md).  Layout: header | shape | tile | lanes... | extras |
-# index u64[n_tiles] | footer.
+# index | footer, where the index region is either
+#   u64 lens[n_tiles]                                  (legacy, no checksums)
+#   u64 lens[n_tiles] | u32 crcs[n_tiles] | u32 meta   (current)
+# — distinguished by its byte extent, so pre-checksum v3 blobs keep parsing
+# (docs/ROBUSTNESS.md).  ``crcs[i]`` covers lane i's bytes; ``meta`` covers
+# header+shape+tile plus the extras blob, so every non-lane byte of the
+# container is checksummed too.
 _HDR_V3 = _HDR_V2
 _FOOTER_V3 = struct.Struct("<QQ")  # (extras offset, index offset)
 _BACKENDS = {"zlib": 0, "huffman": 1, "huffman+zlib": 2}
 _BACKENDS_INV = {v: k for k, v in _BACKENDS.items()}
+
+
+def lane_crc(data) -> int:
+    """Container lane checksum: CRC-32 (IEEE 802.3, via the stdlib's C
+    ``zlib.crc32``).  The format reserves the field for CRC-32C, but no
+    Castagnoli implementation ships with the interpreter and this stack
+    adds no dependencies — the polynomial choice is recorded in
+    docs/ROBUSTNESS.md so a future native-codec swap is a deliberate
+    format bump, not an accident."""
+    return zlib.crc32(bytes(data)) & 0xFFFFFFFF
 
 
 def _pack_extras(extras: dict) -> bytes:
@@ -127,6 +145,22 @@ def lanes_nbytes(tile_blobs) -> int:
     if isinstance(tile_blobs, LaneStore):
         return tile_blobs.nbytes
     return sum(len(b) for b in tile_blobs)
+
+
+def _index_nbytes(n_tiles: int) -> int:
+    """Byte extent of the checksummed v3 index region the writer emits:
+    u64 lens | u32 crcs | u32 meta_crc."""
+    return 8 * n_tiles + 4 * n_tiles + 4
+
+
+def lane_offset(artifact: "TiledCompressed", i: int) -> int:
+    """Container-relative byte offset of lane ``i`` — error-path helper so
+    :class:`CorruptLaneError` can point at the damaged region on disk."""
+    tb = artifact.tile_blobs
+    if isinstance(tb, LaneStore):
+        return int(tb._offs[i])
+    base = _HDR_V3.size + 16 * len(artifact.shape)
+    return base + sum(len(tb[j]) for j in range(i))
 
 # DEPRECATED module-global mirror: how many lanes the last decode touched.
 # Kept as a best-effort alias for existing tests/benchmarks — new code should
@@ -211,6 +245,20 @@ class TiledCompressed:
     order: str = "cubic"
     levels: int = 0
     extras: dict = field(default_factory=dict)
+    # per-lane CRC32 from the container's footer index (None when the blob
+    # predates checksums or the artifact was built in memory — verification
+    # is then skipped), plus the runtime verification policy the opener
+    # chose: ``verify`` in {"none","lazy","full"} and ``on_corrupt`` in
+    # {"raise","quarantine"} (docs/ROBUSTNESS.md).  None of these affect
+    # artifact identity, so they are excluded from equality.
+    lane_crcs: np.ndarray | None = field(default=None, repr=False, compare=False)
+    verify: str = field(default="lazy", repr=False, compare=False)
+    on_corrupt: str = field(default="raise", repr=False, compare=False)
+    fill_value: float = field(default=0.0, repr=False, compare=False)
+    # lanes that already passed / failed their CRC — verification runs at
+    # most once per lane under the lazy policy
+    _verified: set = field(default_factory=set, init=False, repr=False, compare=False)
+    quarantined: set = field(default_factory=set, init=False, repr=False, compare=False)
     # serialization cache keyed on the extras fingerprint (same scheme as
     # SZCompressed): GWLZ.compress_tiled asks for nbytes before and after
     # attaching the model, and size_report() asks again
@@ -236,12 +284,12 @@ class TiledCompressed:
         return (_HDR_V3.size + 16 * len(self.shape)
                 + lanes_nbytes(self.tile_blobs)
                 + len(_pack_extras(self.extras))
-                + 8 * len(self.tile_blobs) + _FOOTER_V3.size)
+                + _index_nbytes(len(self.tile_blobs)) + _FOOTER_V3.size)
 
     def size_report(self) -> dict:
         lanes = lanes_nbytes(self.tile_blobs)
         extras = len(_pack_extras(self.extras))
-        index = 8 * len(self.tile_blobs) + _FOOTER_V3.size
+        index = _index_nbytes(len(self.tile_blobs)) + _FOOTER_V3.size
         header = _HDR_V3.size + 16 * len(self.shape)
         return {"lanes": lanes, "index": index, "extras": extras,
                 "header": header, "total": header + lanes + extras + index}
@@ -277,43 +325,135 @@ class TiledCompressed:
         """Rebuild from a container blob (``bytes`` or any buffer, e.g. a
         ``memoryview`` over an mmap).  Buffer inputs parse *lazily*: lanes
         stay in the backing buffer behind a :class:`LaneStore` and are only
-        copied out when a decode touches them — the mmap-backed open path."""
-        magic, ver = struct.unpack_from("<4sB", blob, 0)
-        assert magic == _MAGIC, "bad GWTC blob"
-        if ver == 1:
-            # v1 predates the predictor layer: lanes are always Lorenzo codes.
-            _m, _v, nd, backend, _pad, ebbits, n_tiles = _HDR_V1.unpack_from(blob, 0)
-            pred, order, levels = PRED_IDS["lorenzo"], ORDER_IDS["cubic"], 0
-            off = _HDR_V1.size
-        elif ver in (2, 3):
-            (_m, _v, nd, backend, pred, order, levels, _pad, ebbits,
-             n_tiles) = _HDR_V2.unpack_from(blob, 0)
-            off = _HDR_V2.size
-        else:
-            raise AssertionError(f"unsupported GWTC version {ver}")
-        shape = struct.unpack_from(f"<{nd}q", blob, off)
-        off += 8 * nd
-        tile = struct.unpack_from(f"<{nd}q", blob, off)
-        off += 8 * nd
+        copied out when a decode touches them — the mmap-backed open path.
+
+        Every structural failure raises :class:`CorruptContainerError` with
+        the byte offset of the failed check; lane payloads are *not* read
+        here — their CRCs (when the container carries them) are checked by
+        :func:`decode_lanes` under the artifact's ``verify`` policy."""
+        try:
+            magic, ver = struct.unpack_from("<4sB", blob, 0)
+        except struct.error as e:
+            raise CorruptContainerError(
+                f"truncated GWTC blob: {e}", offset=0) from e
+        if magic != _MAGIC:
+            raise CorruptContainerError(
+                "bad GWTC magic", offset=0, expected=_MAGIC, actual=bytes(magic))
+        try:
+            if ver == 1:
+                # v1 predates the predictor layer: lanes are always Lorenzo.
+                _m, _v, nd, backend, _pad, ebbits, n_tiles = \
+                    _HDR_V1.unpack_from(blob, 0)
+                pred, order, levels = PRED_IDS["lorenzo"], ORDER_IDS["cubic"], 0
+                off = _HDR_V1.size
+            elif ver in (2, 3):
+                (_m, _v, nd, backend, pred, order, levels, _pad, ebbits,
+                 n_tiles) = _HDR_V2.unpack_from(blob, 0)
+                off = _HDR_V2.size
+            else:
+                raise CorruptContainerError(
+                    "unsupported GWTC version", offset=4,
+                    expected="1..3", actual=int(ver))
+            if not 1 <= nd <= 16:
+                raise CorruptContainerError(
+                    "implausible GWTC rank", offset=5, expected="1..16",
+                    actual=int(nd))
+            if backend not in _BACKENDS_INV:
+                raise CorruptContainerError(
+                    "unknown GWTC entropy backend id", offset=6,
+                    expected=sorted(_BACKENDS_INV), actual=int(backend))
+            if pred not in PRED_NAMES or order not in ORDER_NAMES:
+                raise CorruptContainerError(
+                    "unknown GWTC predictor/order id", offset=7,
+                    actual=(int(pred), int(order)))
+            shape = struct.unpack_from(f"<{nd}q", blob, off)
+            off += 8 * nd
+            tile = struct.unpack_from(f"<{nd}q", blob, off)
+            off += 8 * nd
+        except struct.error as e:
+            raise CorruptContainerError(
+                f"truncated GWTC header: {e}", offset=0) from e
+        if any(d < 1 for d in shape) or any(t < 1 for t in tile):
+            raise CorruptContainerError(
+                "non-positive GWTC shape/tile dims", offset=_HDR_V3.size,
+                actual=(tuple(map(int, shape)), tuple(map(int, tile))))
+        want_tiles = int(np.prod(tile_grid(tuple(shape), tuple(tile))))
+        if n_tiles != want_tiles:
+            raise CorruptContainerError(
+                "GWTC tile count disagrees with the shape/tile grid",
+                offset=off - 16 * nd, expected=want_tiles, actual=int(n_tiles))
+        lane_crcs = None
         if ver in (1, 2):
             # index-first layout: lane lengths precede the lane bytes
+            if off + 8 * n_tiles > len(blob):
+                raise CorruptContainerError(
+                    "truncated GWTC index", offset=off,
+                    expected=f">= {off + 8 * n_tiles} bytes", actual=len(blob))
             lens = np.frombuffer(blob, np.uint64, n_tiles, offset=off).astype(np.int64)
+            # exact-int sum: garbage u64 lens must not wrap int64 past the
+            # extent check and overflow the lane slicing below
+            lens_sum = sum(map(int, np.frombuffer(
+                blob, np.uint64, n_tiles, offset=off)))
             off += 8 * n_tiles
             lanes_start = off
-            extras_off = lanes_start + int(lens.sum())
+            extras_off = lanes_start + lens_sum
+            if (lens < 0).any() or extras_off + 4 > len(blob):
+                raise CorruptContainerError(
+                    "GWTC lane extent overruns the blob", offset=lanes_start,
+                    expected=f"extras at byte {extras_off}", actual=len(blob))
         else:
             # v3 footer layout: lanes start right after the dims; the footer
-            # locates the extras blob and the trailing index
+            # locates the extras blob and the trailing index region, whose
+            # byte extent tells us whether per-lane CRCs are present
             lanes_start = off
-            if len(blob) < _FOOTER_V3.size:
-                raise ValueError("truncated GWTC v3 blob (no footer)")
-            extras_off, index_off = _FOOTER_V3.unpack_from(
-                blob, len(blob) - _FOOTER_V3.size)
-            if index_off + 8 * n_tiles > len(blob) or extras_off > index_off:
-                raise ValueError("corrupt GWTC v3 footer (offsets out of range)")
-            lens = np.frombuffer(blob, np.uint64, n_tiles, offset=index_off).astype(np.int64)
-            if lanes_start + int(lens.sum()) != extras_off:
-                raise ValueError("corrupt GWTC v3 blob (index / lane extent mismatch)")
+            if len(blob) < lanes_start + _FOOTER_V3.size:
+                raise CorruptContainerError(
+                    "truncated GWTC v3 blob (no footer)",
+                    offset=max(0, len(blob) - _FOOTER_V3.size),
+                    expected=f">= {lanes_start + _FOOTER_V3.size} bytes",
+                    actual=len(blob))
+            footer_off = len(blob) - _FOOTER_V3.size
+            extras_off, index_off = _FOOTER_V3.unpack_from(blob, footer_off)
+            if not lanes_start <= extras_off <= index_off <= footer_off:
+                raise CorruptContainerError(
+                    "corrupt GWTC v3 footer (offsets out of range)",
+                    offset=footer_off,
+                    actual=(int(extras_off), int(index_off)))
+            region = footer_off - index_off
+            if region == _index_nbytes(n_tiles):
+                has_crcs = True
+            elif region == 8 * n_tiles:
+                has_crcs = False  # pre-checksum v3 container
+            else:
+                raise CorruptContainerError(
+                    "GWTC v3 index region has an impossible extent",
+                    offset=index_off,
+                    expected=(_index_nbytes(n_tiles), 8 * n_tiles),
+                    actual=int(region))
+            lens = np.frombuffer(blob, np.uint64, n_tiles,
+                                 offset=index_off).astype(np.int64)
+            # exact-int sum: a damaged u64 len must not wrap int64 into a
+            # coincidentally matching total
+            lens_sum = sum(map(int, np.frombuffer(
+                blob, np.uint64, n_tiles, offset=index_off)))
+            if (lens < 0).any() or lanes_start + lens_sum != extras_off:
+                raise CorruptContainerError(
+                    "corrupt GWTC v3 blob (index / lane extent mismatch)",
+                    offset=index_off,
+                    expected=int(extras_off) - lanes_start,
+                    actual=lens_sum)
+            if has_crcs:
+                lane_crcs = np.frombuffer(
+                    blob, np.uint32, n_tiles, offset=index_off + 8 * n_tiles).copy()
+                (meta_crc,) = struct.unpack_from(
+                    "<I", blob, index_off + 12 * n_tiles)
+                got = zlib.crc32(bytes(blob[extras_off:index_off]),
+                                 zlib.crc32(bytes(blob[:lanes_start]))) & 0xFFFFFFFF
+                if got != meta_crc:
+                    raise CorruptContainerError(
+                        "GWTC metadata checksum mismatch (header/shape/extras "
+                        "bytes are damaged)", offset=index_off + 12 * n_tiles,
+                        expected=f"0x{meta_crc:08x}", actual=f"0x{got:08x}")
         offs = lanes_start + np.concatenate([[0], np.cumsum(lens[:-1])]) \
             if n_tiles else np.zeros(0, np.int64)
         if isinstance(blob, (bytes, bytearray)):
@@ -321,13 +461,17 @@ class TiledCompressed:
                 bytes(blob[o : o + ln]) for o, ln in zip(offs, lens)]
         else:
             tile_blobs = LaneStore(blob, offs, lens)
-        extras = _unpack_extras(blob, extras_off)
+        try:
+            extras = _unpack_extras(blob, extras_off)
+        except struct.error as e:
+            raise CorruptContainerError(
+                f"truncated GWTC extras blob: {e}", offset=int(extras_off)) from e
         return TiledCompressed(
             shape=tuple(shape), tile=tuple(tile),
             eb_abs=float(np.uint64(ebbits).view(np.float64)),
             backend=_BACKENDS_INV[backend], tile_blobs=tile_blobs,
             predictor=PRED_NAMES[pred], order=ORDER_NAMES[order],
-            levels=int(levels), extras=extras,
+            levels=int(levels), extras=extras, lane_crcs=lane_crcs,
         )
 
 
@@ -424,29 +568,89 @@ def compress_tiled(
     return artifact, recon[tuple(slice(0, d) for d in x.shape)]
 
 
+def _check_lane(artifact: TiledCompressed, i: int, blob) -> bool:
+    """Verify lane ``i`` against its footer CRC (at most once per lane).
+
+    Returns True when the lane is usable.  On mismatch: raises
+    :class:`CorruptLaneError` under ``on_corrupt="raise"``, or records the
+    lane in ``artifact.quarantined`` and returns False under
+    ``on_corrupt="quarantine"``.  No-op (True) when the container carries no
+    checksums or the policy is ``verify="none"``."""
+    if i in artifact.quarantined:
+        return False
+    if (artifact.lane_crcs is None or artifact.verify == "none"
+            or i in artifact._verified):
+        return True
+    expected = int(artifact.lane_crcs[i])
+    actual = lane_crc(blob)
+    if actual == expected:
+        artifact._verified.add(i)
+        return True
+    if artifact.on_corrupt == "quarantine":
+        artifact.quarantined.add(i)
+        return False
+    raise CorruptLaneError(i, lane_offset=lane_offset(artifact, i),
+                           expected_crc=expected, actual_crc=actual)
+
+
+def verify_lanes(artifact: TiledCompressed, lane_ids=None, *,
+                 workers: int | None = None) -> list[int]:
+    """Checksum the given lanes (all, by default) without decoding them —
+    the ``verify="full"`` open policy.  Returns the quarantined lane ids
+    (always empty under ``on_corrupt="raise"``, which raises instead);
+    returns ``[]`` immediately when the container carries no checksums."""
+    if artifact.lane_crcs is None or artifact.verify == "none":
+        return []
+    ids = list(range(artifact.n_tiles)) if lane_ids is None else list(lane_ids)
+    _map_lanes(lambda i: _check_lane(artifact, i, artifact.tile_blobs[i]),
+               ids, workers)
+    return sorted(artifact.quarantined)
+
+
 def decode_lanes(
-    artifact: TiledCompressed, lane_ids, *, workers: int | None = None
-) -> tuple[jax.Array, int]:
+    artifact: TiledCompressed, lane_ids, *, workers: int | None = None,
+    with_mask: bool = False,
+):
     """Decode the given lanes and reconstruct them; returns
-    ``(recon [len(ids), *tile], lanes_decoded)``.
+    ``(recon [len(ids), *tile], lanes_decoded)`` — or, with
+    ``with_mask=True``, ``(recon, lanes_decoded, bad_mask)`` where
+    ``bad_mask[j]`` marks quarantined positions (filled with the artifact's
+    ``fill_value``), so callers applying a tile transform can re-assert the
+    fill afterwards.
 
     Only the named lanes are touched — this is the random-access primitive
     both :func:`decompress_tiled` and :func:`decompress_region` build on.
+    When the container carries per-lane CRCs and the artifact's ``verify``
+    policy is not ``"none"``, each lane is checksummed before its first
+    decode; a mismatch raises :class:`CorruptLaneError` or — under
+    ``on_corrupt="quarantine"`` — degrades that tile to ``fill_value``.
     The returned lane count is the race-free observability channel (the
     module-level ``DECODE_STATS`` mirror is best-effort, for convenience)."""
     pred = get_predictor(artifact.predictor)
     lane_ids = list(lane_ids)
     blobs = [artifact.tile_blobs[i] for i in lane_ids]
+    good = [j for j, (i, b) in enumerate(zip(lane_ids, blobs))
+            if _check_lane(artifact, i, b)]
     items = _map_lanes(
         lambda b: pred.parse_lane(b, tile=artifact.tile, levels=artifact.levels),
-        blobs, workers)
+        [blobs[j] for j in good], workers)
     with _STATS_LOCK:
-        DECODE_STATS["tiles_decoded"] = len(lane_ids)
+        DECODE_STATS["tiles_decoded"] = len(good)
         DECODE_STATS["tiles_total"] = artifact.n_tiles
-    payload = {k: jnp.asarray(np.stack([it[k] for it in items])) for k in items[0]}
-    recon = pred.decode_tiles(payload, artifact.eb_abs, tile=artifact.tile,
-                              order=artifact.order, levels=artifact.levels)
-    return recon, len(lane_ids)
+    if good:
+        payload = {k: jnp.asarray(np.stack([it[k] for it in items]))
+                   for k in items[0]}
+        recon = pred.decode_tiles(payload, artifact.eb_abs, tile=artifact.tile,
+                                  order=artifact.order, levels=artifact.levels)
+    bad_mask = np.zeros(len(lane_ids), bool)
+    if len(good) < len(lane_ids):
+        bad_mask[[j for j in range(len(lane_ids)) if j not in set(good)]] = True
+        full = jnp.full((len(lane_ids),) + tuple(artifact.tile),
+                        artifact.fill_value, jnp.float32)
+        recon = full.at[jnp.asarray(good, jnp.int32)].set(recon) if good else full
+    if with_mask:
+        return recon, len(good), bad_mask
+    return recon, len(good)
 
 
 def decompress_tiled(
@@ -457,11 +661,23 @@ def decompress_tiled(
     ``tile_transform([K, *tile]) -> [K, *tile]`` post-processes decoded tiles
     before stitching (the GWLZ pipeline enhances per tile through it; it must
     act per-tile so region and full decode stay consistent)."""
-    recon, _ = decode_lanes(artifact, range(artifact.n_tiles), workers=workers)
+    recon, _, bad = decode_lanes(artifact, range(artifact.n_tiles),
+                                 workers=workers, with_mask=True)
     if tile_transform is not None:
         recon = tile_transform(recon)
+        recon = _refill_quarantined(recon, bad, artifact.fill_value)
     out = stitch_tiles(recon, artifact.grid)
     return out[tuple(slice(0, d) for d in artifact.shape)]
+
+
+def _refill_quarantined(recon, bad_mask: np.ndarray, fill_value: float):
+    """Re-assert the fill value on quarantined tile positions *after* a tile
+    transform ran — an enhancer must not resurrect data for a tile whose
+    lane failed its checksum."""
+    if bad_mask.any():
+        recon = recon.at[jnp.asarray(np.nonzero(bad_mask)[0], jnp.int32)].set(
+            jnp.float32(fill_value))
+    return recon
 
 
 def normalize_roi(roi, shape: tuple[int, ...]) -> tuple[tuple[int, int], ...]:
@@ -519,7 +735,9 @@ def decompress_region(
     same values the full batch would (any ``tile_transform`` must preserve
     this by acting on each tile independently)."""
     ids, geom = region_tiles(artifact, roi)
-    recon, _ = decode_lanes(artifact, ids.tolist(), workers=workers)
+    recon, _, bad = decode_lanes(artifact, ids.tolist(), workers=workers,
+                                 with_mask=True)
     if tile_transform is not None:
         recon = tile_transform(recon)
+        recon = _refill_quarantined(recon, bad, artifact.fill_value)
     return assemble_region(recon, geom, artifact.tile)

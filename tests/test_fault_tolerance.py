@@ -1,0 +1,411 @@
+"""Fault-tolerant streaming ingest + container integrity (docs/ROBUSTNESS.md).
+
+Acceptance surface of the robustness PR: per-batch retry with backoff (an
+injected transient device/host fault is survived and the output stays
+byte-identical), the commit journal + resumable compress (interrupted then
+resumed == uninterrupted, byte for byte, for Lorenzo), and end-to-end
+integrity (per-lane CRCs in the v3 footer, ``verify=`` open policies,
+structured ``CorruptLaneError`` / ``CorruptContainerError``, quarantine
+fill with stats accounting)."""
+import os
+
+import numpy as np
+import pytest
+
+from repro import api, cli
+from repro.errors import CorruptContainerError, CorruptLaneError, IntegrityError
+from repro.exec import GWTCWriter, journal_path, plan_stream, stream_compress
+from repro.runtime.fault import FailureInjector, RetryPolicy
+from repro.sz import tiled
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden")
+
+
+@pytest.fixture(scope="module")
+def field():
+    from repro.data import nyx_like_field
+
+    x = np.asarray(nyx_like_field((24, 24, 24), "temperature", seed=21), np.float32)
+    return x / np.float32(np.abs(x).max())
+
+
+def _stream(field, out, **kw):
+    """Small multi-batch stream: 27 tiles, 4 per batch -> 7 batches."""
+    kw.setdefault("abs_eb", 1e-3)
+    kw.setdefault("tile", (8, 8, 8))
+    kw.setdefault("mem_budget", 50_000)
+    kw.setdefault("predictor", "lorenzo")
+    return stream_compress(field, str(out), **kw)
+
+
+@pytest.fixture(scope="module")
+def clean_bytes(field, tmp_path_factory):
+    out = tmp_path_factory.mktemp("clean") / "ref.gwtc"
+    rep = _stream(field, out)
+    assert rep.n_batches == 7 and rep.retries == 0
+    return out.read_bytes()
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy / FailureInjector units
+# ---------------------------------------------------------------------------
+
+
+def test_retry_policy_survives_transients_then_succeeds():
+    calls, waited, seen = [], [], []
+    pol = RetryPolicy(max_attempts=3, backoff=0.01)
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise RuntimeError("blip")
+        return "ok"
+
+    out = pol.run(flaky, on_retry=lambda e, a: seen.append((str(e), a)),
+                  sleep=waited.append)
+    assert out == "ok" and len(calls) == 3
+    assert [a for _, a in seen] == [0, 1]
+    assert waited == [pytest.approx(0.01), pytest.approx(0.02)], \
+        "backoff must be exponential in the attempt index"
+
+
+def test_retry_policy_exhausts_and_raises_last_error():
+    pol = RetryPolicy(max_attempts=2, backoff=0.0)
+    n = []
+
+    def always():
+        n.append(1)
+        raise OSError("disk went away")
+
+    with pytest.raises(OSError, match="disk went away"):
+        pol.run(always, sleep=lambda _: None)
+    assert len(n) == 2, "max_attempts bounds the total tries, not the retries"
+
+
+def test_retry_policy_only_retries_declared_exceptions():
+    n = []
+
+    def bad():
+        n.append(1)
+        raise ValueError("programming error")
+
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=5).run(bad, sleep=lambda _: None)
+    assert len(n) == 1, "a non-transient error must propagate on attempt 1"
+    with pytest.raises(ValueError, match="max_attempts"):
+        RetryPolicy(max_attempts=0)
+
+
+def test_retry_policy_jitter_bounds():
+    pol = RetryPolicy(backoff=0.1, jitter=0.5)
+    for attempt in range(3):
+        base = 0.1 * 2.0 ** attempt
+        for _ in range(16):
+            assert base <= pol.delay(attempt) <= base * 1.5 + 1e-12
+
+
+def test_failure_injector_fires_each_step_n_times():
+    inj = FailureInjector({2, 5}, exc=OSError, attempts=2)
+    for step in range(7):
+        expect = step in (2, 5)
+        for attempt in range(3):
+            if expect and attempt < 2:
+                with pytest.raises(OSError, match=f"step {step}"):
+                    inj.maybe_fail(step)
+            else:
+                inj.maybe_fail(step)
+    assert inj.failed == {2: 2, 5: 2}
+
+
+# ---------------------------------------------------------------------------
+# executor: retry over injected device / host faults
+# ---------------------------------------------------------------------------
+
+
+def test_stream_survives_transient_device_fault(tmp_path, field, clean_bytes):
+    """An OOM-style RuntimeError in the device transform of one batch is
+    retried and the finished container is byte-identical to a clean run."""
+    out = tmp_path / "x.gwtc"
+    rep = _stream(field, out, injector=FailureInjector({1}),
+                  retry=RetryPolicy(max_attempts=3, backoff=0.0))
+    assert rep.retries == 1 and rep.failed_batches == (1,)
+    assert out.read_bytes() == clean_bytes
+    assert not os.path.exists(journal_path(out)), \
+        "finalize must remove the commit journal"
+
+
+def test_stream_survives_transient_append_fault(tmp_path, field, clean_bytes):
+    """A transient OSError while appending a mid-batch lane is survived by
+    rollback-to-last-commit + retry, with no duplicated or torn lanes."""
+    out = tmp_path / "x.gwtc"
+    rep = _stream(field, out,
+                  write_injector=FailureInjector({9}, exc=OSError),
+                  retry=RetryPolicy(max_attempts=3, backoff=0.0))
+    assert rep.retries == 1 and rep.failed_batches == (2,), \
+        "lane 9 lives in batch 2 (4 tiles per batch)"
+    assert out.read_bytes() == clean_bytes
+    with api.open(out, verify="full") as vol:
+        np.testing.assert_allclose(np.asarray(vol), field, atol=1e-3 * 1.01)
+
+
+def test_stream_hard_fault_leaves_resumable_partial(tmp_path, field, clean_bytes):
+    """Exhausted retries leave the partial container AND its journal on
+    disk (instead of unlinking), and ``resume=True`` finishes the stream
+    byte-identically to an uninterrupted run."""
+    out = tmp_path / "x.gwtc"
+    with pytest.raises(RuntimeError, match="injected failure"):
+        _stream(field, out, injector=FailureInjector({3}, attempts=5),
+                retry=RetryPolicy(max_attempts=2, backoff=0.0))
+    assert os.path.exists(out) and os.path.exists(journal_path(out)), \
+        "a journaled stream must keep its partial output for resume"
+
+    rep = _stream(field, out, resume=True)
+    assert rep.resumed_batches == 3, "batches 0-2 were committed pre-fault"
+    assert rep.n_batches == 7
+    assert out.read_bytes() == clean_bytes, \
+        "interrupted-then-resumed must equal uninterrupted, byte for byte"
+    assert not os.path.exists(journal_path(out))
+    with api.open(out, verify="full") as vol:
+        np.testing.assert_allclose(np.asarray(vol), field, atol=1e-3 * 1.01)
+
+
+def test_resume_noop_when_nothing_committed(tmp_path, field, clean_bytes):
+    """A fault in batch 0 commits nothing; resume still rebuilds the whole
+    container from lane 0."""
+    out = tmp_path / "x.gwtc"
+    with pytest.raises(RuntimeError):
+        _stream(field, out, injector=FailureInjector({0}, attempts=9),
+                retry=RetryPolicy(max_attempts=2, backoff=0.0))
+    rep = _stream(field, out, resume=True)
+    assert rep.resumed_batches == 0
+    assert out.read_bytes() == clean_bytes
+
+
+def test_resume_validation_errors(tmp_path, field):
+    out = tmp_path / "x.gwtc"
+    with pytest.raises(FileNotFoundError, match="journal"):
+        _stream(field, out, resume=True)  # nothing to resume
+    import io
+
+    with pytest.raises(ValueError, match="path"):
+        stream_compress(field, io.BytesIO(), abs_eb=1e-3, tile=(8, 8, 8),
+                        mem_budget=50_000, resume=True)
+    from repro.core.trainer import GWLZTrainConfig
+
+    with pytest.raises(ValueError, match="enhance"):
+        stream_compress(field, str(out), abs_eb=1e-3, tile=(8, 8, 8),
+                        mem_budget=50_000, resume=True,
+                        enhance=GWLZTrainConfig(n_groups=2, epochs=1))
+
+
+def test_resume_rejects_tampered_prefix(tmp_path, field):
+    out = tmp_path / "x.gwtc"
+    with pytest.raises(RuntimeError):
+        _stream(field, out, injector=FailureInjector({3}, attempts=9),
+                retry=RetryPolicy(max_attempts=2, backoff=0.0))
+    blob = bytearray(out.read_bytes())
+    blob[tiled._HDR_V3.size + 2] ^= 0xFF  # corrupt a shape dim on disk
+    out.write_bytes(bytes(blob))
+    with pytest.raises(CorruptContainerError, match="prefix"):
+        GWTCWriter.resume(out)
+
+
+def test_plan_resume_point_rounds_down():
+    plan = plan_stream((24, 24, 24), (8, 8, 8), mem_budget=50_000,
+                       predictor="lorenzo", devices=1)
+    assert plan.batch_tiles == 4 and plan.n_tiles == 27
+    assert plan.resume_point(0) == 0
+    assert plan.resume_point(4) == 4
+    assert plan.resume_point(9) == 8, "mid-batch commits surrender the tail"
+    assert plan.resume_point(999) == 24, "clamped to the tile count"
+    ids = [i for run in plan.batches(8) for i in run]
+    assert ids == list(range(8, 27))
+    with pytest.raises(ValueError, match="aligned"):
+        list(plan.batches(3))  # generator: the guard fires on iteration
+
+
+def test_writer_commit_journal_roundtrip(tmp_path):
+    """Writer-level journal protocol: abort keeps the (partial, journal)
+    pair, resume truncates uncommitted bytes and replays the commit state."""
+    path = tmp_path / "w.gwtc"
+    w = GWTCWriter(path, shape=(16, 16, 16), tile=(8, 8, 8), eb_abs=1e-3)
+    for blob in (b"aaaa", b"bb"):
+        w.append_lane(blob)
+    w.commit()
+    w.append_lane(b"cccccc")  # never committed
+    w.abort()
+    assert os.path.exists(journal_path(path))
+
+    w2 = GWTCWriter.resume(path)
+    assert w2.committed_lanes == 2 and w2.can_rollback
+    for blob in (b"cccccc", *[b"dd"] * 5):
+        w2.append_lane(blob)
+    w2.commit()
+    w2.finalize()
+    art = tiled.TiledCompressed.from_bytes(path.read_bytes())
+    assert [bytes(b) for b in art.tile_blobs] == \
+        [b"aaaa", b"bb", b"cccccc"] + [b"dd"] * 5
+    assert art.lane_crcs is not None and len(art.lane_crcs) == 8
+
+
+def test_writer_torn_journal_block_falls_back_to_previous_commit(tmp_path):
+    path = tmp_path / "w.gwtc"
+    w = GWTCWriter(path, shape=(16, 16, 16), tile=(8, 8, 8), eb_abs=1e-3)
+    w.append_lane(b"aaaa")
+    w.commit()
+    w.append_lane(b"bbbb")
+    w.commit()
+    w.abort()
+    jp = journal_path(path)
+    with open(jp, "r+b") as f:  # tear the tail of the last commit block
+        f.truncate(os.path.getsize(jp) - 3)
+    w2 = GWTCWriter.resume(path)
+    assert w2.committed_lanes == 1, "a torn block must yield to the prior commit"
+
+
+# ---------------------------------------------------------------------------
+# integrity: CRC policies, quarantine, structured corruption errors
+# ---------------------------------------------------------------------------
+
+
+def _flip(path, tmp_path, byte, name="bad.gwtc"):
+    blob = bytearray(path.read_bytes())
+    blob[byte] ^= 0x10
+    bad = tmp_path / name
+    bad.write_bytes(bytes(blob))
+    return bad
+
+
+@pytest.fixture()
+def container(tmp_path, field):
+    out = tmp_path / "v.gwtc"
+    vol = api.compress(field, abs_eb=1e-3, tiled=True, tile=(8, 8, 8),
+                       predictor="lorenzo")
+    api.save(out, vol)
+    return out, np.asarray(vol)
+
+
+def test_lazy_verify_detects_lane_flip(tmp_path, container):
+    """Acceptance: a bit-flipped lane is detected on first decode under the
+    default ``verify="lazy"`` — a structured error naming the tile and the
+    damaged byte range, never silent wrong data."""
+    out, _ = container
+    lanes_start = tiled._HDR_V3.size + 16 * 3
+    bad = _flip(out, tmp_path, lanes_start + 11)
+    with api.open(bad) as vol:
+        with pytest.raises(CorruptLaneError) as ei:
+            np.asarray(vol)
+    err = ei.value
+    assert err.tile_id == 0 and err.lane_offset == lanes_start
+    assert err.expected_crc != err.actual_crc
+    assert isinstance(err, IntegrityError) and isinstance(err, ValueError)
+    assert "quarantine" in str(err), "the message must point at the escape hatch"
+
+
+def test_full_verify_fails_fast_at_open(tmp_path, container):
+    out, _ = container
+    art = tiled.TiledCompressed.from_bytes(out.read_bytes())
+    last = tiled.lane_offset(art, art.n_tiles - 1)
+    bad = _flip(out, tmp_path, last + 5)
+    with pytest.raises(CorruptLaneError) as ei:
+        api.open(bad, verify="full")
+    assert ei.value.tile_id == art.n_tiles - 1, \
+        "full verify must scan every lane before any decode"
+
+
+def test_quarantine_fills_and_counts(tmp_path, container):
+    """Acceptance: under ``on_corrupt="quarantine"`` a corrupt lane decodes
+    to the fill value — region reads stay ROI-shaped — and the handle's
+    stats count the quarantined tile."""
+    out, ref = container
+    lanes_start = tiled._HDR_V3.size + 16 * 3
+    bad = _flip(out, tmp_path, lanes_start + 7)
+    with api.open(bad, on_corrupt="quarantine", fill_value=-1.0) as vol:
+        roi = (slice(0, 12), slice(0, 12), slice(0, 12))
+        got = vol[roi]
+        assert got.shape == (12, 12, 12)
+        assert np.all(got[:8, :8, :8] == -1.0), "tile 0 must be fill-valued"
+        np.testing.assert_array_equal(got[8:, :, :], ref[roi][8:, :, :]), \
+            "healthy tiles must decode normally"
+        assert vol.stats.quarantined == 1
+        assert "quarantined" in repr(vol.stats)
+
+
+def test_verify_none_skips_checksums(tmp_path, container):
+    """The opt-out: CRCs are never consulted, so a flip deep in a lane's
+    payload decodes to (wrong) data instead of raising CorruptLaneError."""
+    out, ref = container
+    lanes_start = tiled._HDR_V3.size + 16 * 3
+    bad = _flip(out, tmp_path, lanes_start + 11)
+    with api.open(bad, verify="none") as vol:
+        try:
+            got = np.asarray(vol)
+        except CorruptLaneError:  # pragma: no cover - the asserted failure
+            pytest.fail("verify='none' must not run CRC checks")
+        except Exception:
+            return  # the entropy parser may reject the garbage — also fine
+        assert not np.array_equal(got, ref), "the damage must surface somewhere"
+
+
+def test_metadata_flip_raises_corrupt_container(tmp_path, container):
+    out, _ = container
+    bad = _flip(out, tmp_path, tiled._HDR_V3.size + 1)  # a shape byte
+    with pytest.raises(CorruptContainerError):
+        api.open(bad)
+
+
+def test_verify_policy_validation(container):
+    out, _ = container
+    with pytest.raises(ValueError, match="verify"):
+        api.open(out, verify="paranoid")
+    with pytest.raises(ValueError, match="on_corrupt"):
+        api.open(out, on_corrupt="ignore")
+
+
+def test_corrupt_container_zero_length_garbage_truncated(tmp_path, container):
+    out, _ = container
+    zero = tmp_path / "zero.gwtc"
+    zero.write_bytes(b"")
+    with pytest.raises(CorruptContainerError, match="magic"):
+        api.open(zero)
+    garbage = tmp_path / "garbage.gwtc"
+    garbage.write_bytes(b"NOPE" + bytes(100))
+    with pytest.raises(CorruptContainerError) as ei:
+        api.open(garbage)
+    assert ei.value.offset == 0, "a bad magic is located at byte 0"
+    trunc = tmp_path / "trunc.gwtc"
+    trunc.write_bytes(out.read_bytes()[:-7])
+    with pytest.raises(CorruptContainerError, match="footer"):
+        api.open(trunc)
+
+
+def test_verify_lanes_full_scan_clean_and_legacy(container):
+    out, _ = container
+    art = tiled.TiledCompressed.from_bytes(out.read_bytes())
+    assert tiled.verify_lanes(art) == []
+    legacy = tiled.TiledCompressed.from_bytes(
+        open(os.path.join(GOLDEN, "gwtc_v1.bin"), "rb").read())
+    assert legacy.lane_crcs is None
+    assert tiled.verify_lanes(legacy) == [], \
+        "checksum-free legacy containers skip verification"
+
+
+# ---------------------------------------------------------------------------
+# CLI: --resume / --retries / verify
+# ---------------------------------------------------------------------------
+
+
+def test_cli_resume_requires_stream(tmp_path, field):
+    src = tmp_path / "x.npy"
+    np.save(src, field)
+    with pytest.raises(SystemExit):
+        cli.main(["compress", str(src), str(tmp_path / "x.gwtc"),
+                  "--abs-eb", "1e-3", "--resume"])
+
+
+def test_cli_verify_good_and_corrupt(tmp_path, container):
+    out, _ = container
+    assert cli.main(["verify", str(out)]) == 0
+    lanes_start = tiled._HDR_V3.size + 16 * 3
+    bad = _flip(out, tmp_path, lanes_start + 11)
+    assert cli.main(["verify", str(bad)]) == 1
