@@ -38,6 +38,7 @@ Reference: docs/API.md.  The shell surface is ``python -m repro.cli``.
 from __future__ import annotations
 
 import io
+import itertools
 import mmap as _mmap
 import os
 import struct
@@ -123,18 +124,21 @@ def _release_resources(resources: tuple) -> None:
 class DecodeStats:
     """Per-handle decode observability: ``tiles_decoded`` (entropy lanes
     actually decoded by this handle), ``tiles_total`` (lanes in the
-    artifact), and ``cache_hits`` (reads served from the decoded-tile cache
-    or the one-shot full-decode cache).
+    artifact), and ``cache_hits`` (reads served from the decoded-tile cache,
+    another thread's in-flight decode, or the one-shot full-decode cache).
 
-    Counters are plain lock-free increments — they are monotone and exact
-    under single-threaded use; under heavy concurrent hammering they may
-    undercount (never block, never corrupt).  When the volume carries
-    train-time :class:`~repro.core.pipeline.GWLZStats` (the paper metrics),
-    their attributes forward through this object, so ``vol.stats.psnr_gwlz``
+    Counters are guarded by a per-handle lock and EXACT under concurrent
+    region reads — ``tiles_decoded + cache_hits`` equals the number of
+    lane touches across every thread (the serving daemon's ``/metrics``
+    is built on these, so lost updates would silently skew hit rates).
+    When the volume carries train-time
+    :class:`~repro.core.pipeline.GWLZStats` (the paper metrics), their
+    attributes forward through this object, so ``vol.stats.psnr_gwlz``
     keeps working.  The module-global ``repro.sz.tiled.DECODE_STATS`` is the
     deprecated cross-handle mirror of the same counts."""
 
     def __init__(self, tiles_total: int, train: GWLZStats | None = None):
+        self._lock = threading.Lock()
         self.tiles_decoded = 0
         self.tiles_total = tiles_total
         self.cache_hits = 0
@@ -142,6 +146,18 @@ class DecodeStats:
         # decode as the fill value instead of raising (docs/ROBUSTNESS.md)
         self.quarantined = 0
         self._train = train
+
+    def record(self, *, decoded: int = 0, hits: int = 0) -> None:
+        """Atomically account one read's lane touches."""
+        with self._lock:
+            self.tiles_decoded += decoded
+            self.cache_hits += hits
+
+    def record_quarantined(self, n: int) -> None:
+        """Absolute update from the artifact's (grow-only) quarantine set."""
+        with self._lock:
+            if n > self.quarantined:
+                self.quarantined = n
 
     def __getattr__(self, name):
         train = self.__dict__.get("_train")
@@ -163,6 +179,11 @@ class DecodeStats:
 # the handle
 # ---------------------------------------------------------------------------
 
+# Process-wide namespace allocator for tile-cache keys: every handle keys its
+# entries as ``(ns, tile_id)`` so MANY handles can share one budgeted
+# TileCache (the serving daemon's pool) without id collisions.
+_VOL_NS = itertools.count(1)
+
 
 class CompressedVolume:
     """Lazy numpy-like handle over a compressed artifact.
@@ -176,18 +197,26 @@ class CompressedVolume:
     once and cached.  Region and full decode are bit-identical by the
     stack's construction, so the same consumer code works on either
     container.
+
+    ``tile_cache`` injects a SHARED :class:`TileCache` (docs/SERVING.md):
+    the handle namespaces its keys with ``cache_ns`` (default: a fresh
+    process-unique id), never clears entries it does not own, and on
+    :meth:`close` drops only its own namespace.
     """
 
     def __init__(self, artifact: A.Artifact, *, stats: GWLZStats | None = None,
-                 pipeline: GWLZ | None = None, cache_bytes: int | None = None):
+                 pipeline: GWLZ | None = None, cache_bytes: int | None = None,
+                 tile_cache: TileCache | None = None, cache_ns=None):
         self.artifact = artifact
         self.train_stats = stats  # GWLZStats from enhanced compression, or None
         self.pipeline = pipeline or GWLZ()
         self._cache: np.ndarray | None = None  # one-shot full-decode cache
         tiles_total = artifact.n_tiles if isinstance(artifact, TiledCompressed) else 1
         self.stats = DecodeStats(tiles_total, train=stats)
-        self.tile_cache = TileCache(
+        self._owns_cache = tile_cache is None
+        self.tile_cache = tile_cache if tile_cache is not None else TileCache(
             DEFAULT_TILE_CACHE_BYTES if cache_bytes is None else cache_bytes)
+        self.cache_ns = cache_ns if cache_ns is not None else next(_VOL_NS)
         self._resources: tuple = ()  # mmap/file handles owned by this handle
         self._closed = False
 
@@ -210,7 +239,10 @@ class CompressedVolume:
             return
         self._closed = True
         self._cache = None
-        self.tile_cache.clear()
+        if self._owns_cache:
+            self.tile_cache.clear()
+        else:  # shared cache: evict only this handle's namespace
+            self.tile_cache.drop_namespace(self.cache_ns)
         lanes = getattr(self.artifact, "tile_blobs", None)
         if isinstance(lanes, LaneStore):
             lanes.release()
@@ -285,10 +317,10 @@ class CompressedVolume:
         if self._cache is None:
             self._cache = np.asarray(self.pipeline.decode(self.artifact))
             self._cache.setflags(write=False)
-            self.stats.tiles_decoded += self.stats.tiles_total
+            self.stats.record(decoded=self.stats.tiles_total)
             self._sync_quarantine()
         else:
-            self.stats.cache_hits += self.stats.tiles_total
+            self.stats.record(hits=self.stats.tiles_total)
         return self._cache
 
     def _sync_quarantine(self) -> None:
@@ -296,26 +328,48 @@ class CompressedVolume:
         (the set only grows, so an absolute copy is race-safe)."""
         q = getattr(self.artifact, "quarantined", None)
         if q:
-            self.stats.quarantined = len(q)
+            self.stats.record_quarantined(len(q))
 
     def _tiles_for(self, ids: list[int]) -> np.ndarray:
         """Final (enhanced) tile values for the given lane ids, through the
-        size-capped per-handle LRU: cached tiles are returned as-is, missing
-        lanes entropy-decode in ONE batched pipeline call and populate the
-        cache.  Safe under concurrent readers — lookups/inserts lock inside
-        :class:`TileCache`, decoding runs outside the lock, and the fixed
-        per-tile programs make any duplicated concurrent decode of the same
-        lane bit-identical, so a racing insert is harmless."""
-        found = self.tile_cache.get_many(ids)
-        missing = [i for i in ids if i not in found]
-        if missing:
-            dec = np.asarray(self.pipeline.decode_tiles(self.artifact, missing))
-            for j, i in enumerate(missing):
-                tile = np.ascontiguousarray(dec[j])
-                self.tile_cache.put(i, tile)
-                found[i] = tile
-        self.stats.tiles_decoded += len(missing)
-        self.stats.cache_hits += len(ids) - len(missing)
+        size-capped (possibly shared) LRU with single-flight coalescing:
+        cached tiles return as-is, lanes nobody is decoding are claimed and
+        entropy-decode in ONE batched pipeline call, and lanes another
+        thread already claimed are awaited instead of decoded twice — so
+        concurrent overlapping ROIs cost each lane exactly one decode.
+        Lookups/claims lock inside :class:`TileCache`; decoding runs outside
+        the lock.  An abandoned claim (the owner's decode raised) wakes the
+        waiters, one of which re-claims and retries (hitting the same
+        deterministic error if the lane is truly corrupt)."""
+        cache, ns = self.tile_cache, self.cache_ns
+        found: dict[int, np.ndarray] = {}
+        decoded = 0
+        pending = list(dict.fromkeys(ids))
+        while pending:
+            got, mine, theirs = cache.claim([(ns, i) for i in pending])
+            for (_n, i), v in got.items():
+                found[i] = v
+            if mine:
+                mine_ids = [k[1] for k in mine]
+                try:
+                    dec = np.asarray(
+                        self.pipeline.decode_tiles(self.artifact, mine_ids))
+                except BaseException:
+                    cache.abandon(mine)
+                    raise
+                for j, k in enumerate(mine):
+                    tile = np.ascontiguousarray(dec[j])
+                    cache.fulfill(k, tile)
+                    found[k[1]] = tile
+                decoded += len(mine)
+            pending = []
+            for k, flight in theirs.items():
+                v = cache.wait(flight)
+                if v is None:  # owner abandoned: re-claim this lane
+                    pending.append(k[1])
+                else:
+                    found[k[1]] = v
+        self.stats.record(decoded=decoded, hits=len(ids) - decoded)
         self._sync_quarantine()
         # deprecated module mirror: lanes the request touched (legacy
         # semantics predate the cache, where touched == entropy-decoded)
@@ -514,12 +568,14 @@ class Dataset(Mapping):
 
     def __init__(self, blob, index: dict[str, tuple[int, int]],
                  *, pipeline: GWLZ | None = None, cache_bytes: int | None = None,
+                 tile_cache: TileCache | None = None,
                  verify: str = "lazy", on_corrupt: str = "raise",
                  fill_value: float = 0.0):
         self._blob = blob
         self._index = index
         self._pipeline = pipeline
         self._cache_bytes = cache_bytes
+        self._tile_cache = tile_cache
         self._verify = verify
         self._on_corrupt = on_corrupt
         self._fill_value = fill_value
@@ -529,7 +585,8 @@ class Dataset(Mapping):
 
     @staticmethod
     def from_bytes(blob, *, pipeline: GWLZ | None = None,
-                   cache_bytes: int | None = None, verify: str = "lazy",
+                   cache_bytes: int | None = None,
+                   tile_cache: TileCache | None = None, verify: str = "lazy",
                    on_corrupt: str = "raise", fill_value: float = 0.0) -> "Dataset":
         try:
             magic, ver, n_fields = _GWDS_HDR.unpack_from(blob, 0)
@@ -567,8 +624,8 @@ class Dataset(Mapping):
             raise CorruptContainerError(
                 f"truncated or corrupt GWDS envelope: {e}", offset=0) from e
         return Dataset(blob, index, pipeline=pipeline, cache_bytes=cache_bytes,
-                       verify=verify, on_corrupt=on_corrupt,
-                       fill_value=fill_value)
+                       tile_cache=tile_cache, verify=verify,
+                       on_corrupt=on_corrupt, fill_value=fill_value)
 
     @staticmethod
     def build(fields: Mapping[str, "CompressedVolume | A.Artifact"]) -> bytes:
@@ -600,7 +657,8 @@ class Dataset(Mapping):
             art = A.from_bytes(self._blob[fo : fo + fl])
             _apply_verify(art, self._verify, self._on_corrupt, self._fill_value)
             self._cache[name] = CompressedVolume(
-                art, pipeline=self._pipeline, cache_bytes=self._cache_bytes)
+                art, pipeline=self._pipeline, cache_bytes=self._cache_bytes,
+                tile_cache=self._tile_cache)
         return self._cache[name]
 
     def __iter__(self) -> Iterator[str]:
@@ -661,8 +719,10 @@ class Dataset(Mapping):
 
 
 def from_bytes(blob, *, pipeline: GWLZ | None = None,
-               cache_bytes: int | None = None, verify: str = "lazy",
-               on_corrupt: str = "raise", fill_value: float = 0.0):
+               cache_bytes: int | None = None,
+               tile_cache: TileCache | None = None, cache_ns=None,
+               verify: str = "lazy", on_corrupt: str = "raise",
+               fill_value: float = 0.0):
     """Sniff the envelope magic and reconstruct the right reader.
 
     ``SZJX``/``GWTC`` (any registered artifact container) ->
@@ -670,14 +730,16 @@ def from_bytes(blob, *, pipeline: GWLZ | None = None,
     be bytes or any buffer (a memoryview over an mmap parses lazily: tiled
     lanes stay on disk until a decode touches them).  ``verify`` /
     ``on_corrupt`` / ``fill_value`` install the integrity policy described
-    under :func:`open`.  Corrupt input raises
-    :class:`~repro.errors.CorruptContainerError`."""
+    under :func:`open`; ``tile_cache`` / ``cache_ns`` inject a shared
+    decoded-tile cache as described there too."""
     if A.sniff_magic(blob) == GWDS_MAGIC:
         return Dataset.from_bytes(blob, pipeline=pipeline,
-                                  cache_bytes=cache_bytes, verify=verify,
+                                  cache_bytes=cache_bytes,
+                                  tile_cache=tile_cache, verify=verify,
                                   on_corrupt=on_corrupt, fill_value=fill_value)
     art = _apply_verify(A.from_bytes(blob), verify, on_corrupt, fill_value)
-    return CompressedVolume(art, pipeline=pipeline, cache_bytes=cache_bytes)
+    return CompressedVolume(art, pipeline=pipeline, cache_bytes=cache_bytes,
+                            tile_cache=tile_cache, cache_ns=cache_ns)
 
 
 def save(path: str | os.PathLike,
@@ -707,6 +769,7 @@ def save(path: str | os.PathLike,
 
 def open(path: str | os.PathLike, *, pipeline: GWLZ | None = None,
          mmap: bool = True, cache_bytes: int | None = None,
+         tile_cache: TileCache | None = None, cache_ns=None,
          verify: str = "lazy", on_corrupt: str = "raise",
          fill_value: float = 0.0):
     """Open a compressed file, sniffing the envelope to pick the decoder.
@@ -723,6 +786,11 @@ def open(path: str | os.PathLike, *, pipeline: GWLZ | None = None,
     ``mmap=False`` forces an eager full read (no handle-held resources).
     ``cache_bytes`` caps the handle's decoded-tile LRU cache
     (default ``REPRO_TILE_CACHE_BYTES`` or 256 MiB; 0 disables it).
+    Alternatively ``tile_cache`` injects an existing (shared)
+    :class:`~repro.exec.cache.TileCache` — many handles then compete for
+    ONE byte budget, each keyed under its own ``cache_ns`` namespace (the
+    ``repro.serve`` daemon's pooling mode, docs/SERVING.md); closing such a
+    handle evicts only its namespace, never its neighbors' tiles.
 
     Integrity (docs/ROBUSTNESS.md): structural damage (truncation, garbage,
     bad offsets, metadata checksum failure) raises
@@ -744,11 +812,13 @@ def open(path: str | os.PathLike, *, pipeline: GWLZ | None = None,
         with f:
             blob = f.read()
         return from_bytes(blob, pipeline=pipeline, cache_bytes=cache_bytes,
+                          tile_cache=tile_cache, cache_ns=cache_ns,
                           verify=verify, on_corrupt=on_corrupt,
                           fill_value=fill_value)
     mv = memoryview(mm)
     try:
         obj = from_bytes(mv, pipeline=pipeline, cache_bytes=cache_bytes,
+                         tile_cache=tile_cache, cache_ns=cache_ns,
                          verify=verify, on_corrupt=on_corrupt,
                          fill_value=fill_value)
     except Exception:

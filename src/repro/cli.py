@@ -10,6 +10,9 @@
     python -m repro.cli region     PATH --roi "8:40,:,16:32" [--out OUT.npy]
                                    [--field NAME]
     python -m repro.cli verify     PATH [--field NAME]
+    python -m repro.cli serve      [NAME=]PATH ... [--port 8177]
+                                   [--cache-bytes 256M] [--mem-budget 256M]
+                                   [--on-corrupt raise|quarantine] [--smoke]
 
 ``compress IN`` takes a ``.npy`` volume, or the sentinel
 ``synthetic:<field>[:<side>]`` (e.g. ``synthetic:temperature:24``) for a
@@ -24,7 +27,12 @@ container end to end — envelope structure, metadata checksum, and every
 lane CRC — and exits nonzero on the first corruption.  Every subcommand
 works on whatever envelope ``api.open`` can sniff
 (``SZJX``/``GWTC``/``GWDS``); ``--field`` selects a field from multi-field
-datasets.
+datasets.  ``serve`` runs the multi-tenant region-decode daemon over the
+named volumes behind one shared tile cache (docs/SERVING.md).
+
+Exit codes are uniform across subcommands: **0** success, **1** integrity
+failure (corrupt container / failed CRC), **2** usage error (bad
+arguments, missing files or fields, invalid ROI).
 """
 from __future__ import annotations
 
@@ -34,6 +42,32 @@ import sys
 import numpy as np
 
 from repro import api
+
+# Uniform exit codes (see module docstring): raise SystemExit(EXIT_*) via
+# _fail so every subcommand reports failures the same way.
+EXIT_OK = 0
+EXIT_INTEGRITY = 1
+EXIT_USAGE = 2
+
+
+def _fail(what: str, msg, code: int = EXIT_USAGE) -> SystemExit:
+    """Print a clean one-line error and return the SystemExit to raise."""
+    print(f"{what}: {msg}", file=sys.stderr)
+    return SystemExit(code)
+
+
+def _open(path, what: str, **kw):
+    """api.open with CLI-grade errors: missing/unreadable files are usage
+    errors (exit 2), corrupt containers are integrity errors (exit 1)."""
+    from repro.errors import IntegrityError
+
+    try:
+        return api.open(path, **kw)
+    except OSError as e:
+        raise _fail(what, f"cannot open {path!r}: {e.strerror or e}")
+    except IntegrityError as e:
+        print(f"CORRUPT: {e}", file=sys.stderr)
+        raise SystemExit(EXIT_INTEGRITY) from None
 
 
 def parse_size(text: str) -> int:
@@ -74,7 +108,10 @@ def _load_volume(spec: str) -> np.ndarray:
         from repro.data import nyx_like_field
 
         return np.asarray(nyx_like_field((side,) * 3, field, seed=1))
-    return np.load(spec)
+    try:
+        return np.load(spec)
+    except OSError as e:
+        raise _fail("compress", f"cannot load {spec!r}: {e}") from None
 
 
 def _select(obj, field: str | None, what: str):
@@ -83,14 +120,14 @@ def _select(obj, field: str | None, what: str):
         if field is None:
             if len(obj) == 1:
                 return obj[next(iter(obj))]
-            raise SystemExit(
-                f"{what}: GWDS dataset has fields {list(obj)}; pick one with --field")
+            raise _fail(what, f"GWDS dataset has fields {list(obj)}; "
+                              "pick one with --field")
         if field not in obj:
-            raise SystemExit(
-                f"{what}: no field {field!r} in dataset (fields: {list(obj)})")
+            raise _fail(what, f"no field {field!r} in dataset "
+                              f"(fields: {list(obj)})")
         return obj[field]
     if field is not None:
-        raise SystemExit(f"{what}: --field only applies to GWDS datasets")
+        raise _fail(what, "--field only applies to GWDS datasets")
     return obj
 
 
@@ -105,7 +142,7 @@ def cmd_compress(args) -> int:
         try:
             budget = parse_size(args.mem_budget)
         except ValueError as e:
-            raise SystemExit(f"compress: {e}")
+            raise _fail("compress", e) from None
         # .npy paths stream straight off the memmap; synthetic fields are
         # generated in memory (they exist for smoke tests, not scale)
         source = args.input if args.input.endswith(".npy") else _load_volume(args.input)
@@ -137,7 +174,7 @@ def cmd_compress(args) -> int:
               + (", enhanced" if rep.enhanced else "") + fault)
         return 0
     if args.resume:
-        raise SystemExit("compress: --resume requires --stream")
+        raise _fail("compress", "--resume requires --stream")
     x = _load_volume(args.input)
     vol = api.compress(
         x, eb=args.eb, abs_eb=args.abs_eb, tiled=args.tiled,
@@ -153,7 +190,7 @@ def cmd_compress(args) -> int:
 
 
 def cmd_decompress(args) -> int:
-    vol = _select(api.open(args.input), args.field, "decompress")
+    vol = _select(_open(args.input, "decompress"), args.field, "decompress")
     arr = np.asarray(vol)
     np.save(args.output, arr)
     print(f"wrote {args.output}: shape {arr.shape} dtype {arr.dtype} "
@@ -162,7 +199,7 @@ def cmd_decompress(args) -> int:
 
 
 def cmd_info(args) -> int:
-    obj = api.open(args.path)
+    obj = _open(args.path, "info")
     if isinstance(obj, api.Dataset):
         print(f"GWDS dataset: {len(obj)} fields, {obj.nbytes} bytes "
               f"(index {obj.size_report()['index']} B)")
@@ -183,17 +220,24 @@ def cmd_info(args) -> int:
 
 
 def cmd_region(args) -> int:
-    vol = _select(api.open(args.path), args.field, "region")
+    from repro.errors import IntegrityError
+
+    vol = _select(_open(args.path, "region"), args.field, "region")
     try:
         roi = parse_roi(args.roi)
     except ValueError as e:
-        raise SystemExit(f"region: bad --roi {args.roi!r}: {e}")
+        raise _fail("region", f"bad --roi {args.roi!r}: {e}") from None
     try:
         lanes, total = api.region_lane_count(vol, roi)
         block = vol[roi]
+    except IntegrityError as e:
+        print(f"CORRUPT: {e}", file=sys.stderr)
+        return EXIT_INTEGRITY
     except (IndexError, ValueError) as e:
-        raise SystemExit(f"region: --roi {args.roi!r} invalid for shape "
-                         f"{vol.shape}: {e}")
+        # covers out-of-bounds ROIs and reads through a closed handle — a
+        # clean one-line usage error, never a traceback
+        raise _fail("region", f"--roi {args.roi!r} invalid for shape "
+                              f"{vol.shape}: {e}") from None
     rng = (f"min {block.min():.5g} max {block.max():.5g}" if block.size
            else "empty")
     print(f"roi {args.roi} -> shape {block.shape}, decoded {lanes}/{total} lanes, "
@@ -207,32 +251,106 @@ def cmd_region(args) -> int:
 def cmd_verify(args) -> int:
     from repro.errors import IntegrityError
 
-    try:
-        obj = api.open(args.path, verify="full")
-    except IntegrityError as e:
-        print(f"CORRUPT: {e}", file=sys.stderr)
-        return 1
+    obj = _open(args.path, "verify", verify="full")
     with obj:
         if isinstance(obj, api.Dataset):
             names = [args.field] if args.field else list(obj)
             try:
                 for name in names:
+                    if name not in obj:
+                        raise _fail("verify", f"no field {name!r} in dataset "
+                                              f"(fields: {list(obj)})")
                     vol = obj[name]  # field parse + full lane verification
                     lanes = vol.stats.tiles_total if vol.tiled else 1
                     print(f"ok: field {name!r} ({lanes} lanes)")
             except IntegrityError as e:
                 print(f"CORRUPT: field {name!r}: {e}", file=sys.stderr)
-                return 1
-            return 0
+                return EXIT_INTEGRITY
+            return EXIT_OK
         if args.field is not None:
-            raise SystemExit("verify: --field only applies to GWDS datasets")
+            raise _fail("verify", "--field only applies to GWDS datasets")
         art = obj.artifact
         checked = getattr(art, "lane_crcs", None)
         note = (f"{art.n_tiles} lane CRCs checked" if checked is not None
                 else "no per-lane checksums (pre-checksum container); "
                      "structural checks only")
         print(f"ok: {args.path} ({note})")
-    return 0
+    return EXIT_OK
+
+
+def cmd_serve(args) -> int:
+    from repro import serve as _serve
+
+    volumes: dict[str, str] = {}
+    for spec in args.volumes:
+        name, sep, path = spec.partition("=")
+        if not sep:
+            name, path = None, spec
+        if name is None:  # default name: file stem ("nyx.gwtc" -> "nyx")
+            import os
+
+            name = os.path.splitext(os.path.basename(path))[0]
+        if not name:
+            raise _fail("serve", f"empty volume name in {spec!r}")
+        if name in volumes:
+            raise _fail("serve", f"duplicate volume name {name!r} "
+                                 "(use NAME=PATH to disambiguate)")
+        volumes[name] = path
+    try:
+        cache_bytes = parse_size(args.cache_bytes)
+        mem_budget = parse_size(args.mem_budget)
+    except ValueError as e:
+        raise _fail("serve", e) from None
+    try:
+        server = _serve.RegionServer(
+            volumes, host=args.host, port=args.port, cache_bytes=cache_bytes,
+            mem_budget=mem_budget, max_queue=args.max_queue,
+            on_corrupt=args.on_corrupt)
+    except OSError as e:
+        raise _fail("serve", f"cannot start: {e.strerror or e}")
+    except api.IntegrityError as e:
+        print(f"CORRUPT: {e}", file=sys.stderr)
+        return EXIT_INTEGRITY
+    with server:
+        print(f"serving {sorted(server.pool.names)} on {server.url} "
+              f"(cache {cache_bytes >> 20} MiB, budget {mem_budget >> 20} MiB)",
+              flush=True)
+        if args.smoke:
+            return _serve_smoke(server)
+        try:
+            server._thread.join()
+        except KeyboardInterrupt:
+            print("shutting down", file=sys.stderr)
+        return EXIT_OK
+
+
+def _serve_smoke(server) -> int:
+    """--smoke: exercise every endpoint over real HTTP from this process —
+    a repeated ROI must be served from the shared cache — then exit.  CI's
+    serve smoke step and the tests run this instead of a daemonized run."""
+    from repro.serve import fetch_json, fetch_region
+
+    url = server.url
+    assert fetch_json(url, "/healthz")["status"] == "ok"
+    name = sorted(server.pool.names)[0]
+    info = fetch_json(url, f"/v/{name}/info")
+    hi = min(8, info["shape"][0])
+    roi = f"0:{hi}" + ",:" * (len(info["shape"]) - 1)
+    a, meta1 = fetch_region(url, name, roi)
+    b, meta2 = fetch_region(url, name, roi)  # identical ROI: cache must hit
+    if not np.array_equal(a, b):
+        print("smoke: repeated ROI decoded differently", file=sys.stderr)
+        return EXIT_INTEGRITY
+    m = fetch_json(url, "/metrics")
+    hit_rate = m["cache"]["hit_rate"]
+    if not (hit_rate > 0):
+        print(f"smoke: expected cache hits on a repeated ROI, got {m['cache']}",
+              file=sys.stderr)
+        return EXIT_INTEGRITY
+    print(f"smoke ok: {meta2['lanes']}/{meta2['lanes_total']} lanes, "
+          f"hit_rate {hit_rate:.2f}, p99 "
+          f"{m['latency_ms'].get('p99', 0):.1f} ms over {m['requests']} requests")
+    return EXIT_OK
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -291,6 +409,27 @@ def main(argv: list[str] | None = None) -> int:
     v.add_argument("path")
     v.add_argument("--field", default=None, help="field name (GWDS datasets)")
     v.set_defaults(fn=cmd_verify)
+
+    s = sub.add_parser("serve", help="multi-tenant region-decode daemon "
+                                     "(docs/SERVING.md)")
+    s.add_argument("volumes", nargs="+", metavar="[NAME=]PATH",
+                   help="volumes to serve (default name: the file stem)")
+    s.add_argument("--host", default="127.0.0.1")
+    s.add_argument("--port", type=int, default=8177,
+                   help="listen port (0 binds an ephemeral port)")
+    s.add_argument("--cache-bytes", default="256M",
+                   help="shared decoded-tile cache budget, e.g. 64M / 1G")
+    s.add_argument("--mem-budget", default="256M",
+                   help="admission-control working-set budget")
+    s.add_argument("--max-queue", type=int, default=1024,
+                   help="max requests waiting on admission before 503")
+    s.add_argument("--on-corrupt", default="raise",
+                   choices=["raise", "quarantine"],
+                   help="per-lane CRC failure policy for served volumes")
+    s.add_argument("--smoke", action="store_true",
+                   help="start, self-exercise every endpoint over HTTP "
+                        "(asserting cache hits on a repeated ROI), then exit")
+    s.set_defaults(fn=cmd_serve)
 
     args = ap.parse_args(argv)
     if args.cmd == "compress" and (args.eb is None) == (args.abs_eb is None):

@@ -18,7 +18,7 @@ here is importable for tests and power users.
 """
 from repro.exec.cache import TileCache
 from repro.exec.executor import StreamReport, stream_compress
-from repro.exec.plan import StreamPlan, plan_stream
+from repro.exec.plan import StreamPlan, max_inflight_tiles, plan_stream, tile_working_bytes
 from repro.exec.sources import ArraySource, IterSource, NpyFileSource, TileSource, as_source
 from repro.exec.writer import GWDSWriter, GWTCWriter, journal_path
 
@@ -34,6 +34,8 @@ __all__ = [
     "TileSource",
     "as_source",
     "journal_path",
+    "max_inflight_tiles",
     "plan_stream",
     "stream_compress",
+    "tile_working_bytes",
 ]

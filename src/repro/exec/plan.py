@@ -32,6 +32,26 @@ def tile_working_bytes(tile: tuple[int, ...], predictor: str, levels: int) -> in
     return 4 * t + 8 * t
 
 
+def max_inflight_tiles(
+    mem_budget: int,
+    tile: tuple[int, ...],
+    *,
+    predictor: str = "lorenzo",
+    levels: int = 0,
+) -> int:
+    """Admission width for concurrent DECODE: how many tiles may be
+    in flight at once before their working sets overflow ``mem_budget``.
+
+    The per-tile cost reuses :func:`tile_working_bytes` — decode walks the
+    same payload leaves the streamed encode does — so the serving daemon's
+    admission control and the streaming executor's batch sizing are two
+    views of one byte budget (docs/SERVING.md).  Always admits at least
+    one tile: a budget smaller than a single working set serializes
+    requests rather than deadlocking them."""
+    per = tile_working_bytes(tile, predictor, levels)
+    return max(1, int(mem_budget) // per)
+
+
 @dataclass(frozen=True)
 class StreamPlan:
     shape: tuple[int, ...]

@@ -294,21 +294,28 @@ def test_cli_synthetic_and_parse_roi(tmp_path):
             cli.main(["region", str(out), "--roi", bad])
 
 
-def test_cli_gwds_field_selection(tmp_path, volume):
+def test_cli_gwds_field_selection(tmp_path, volume, capsys):
     a = api.compress(volume, abs_eb=1e-2)
     path = tmp_path / "snap.gwds"
     api.save(path, {"t": a, "rho": a})
     out = tmp_path / "t.npy"
     assert cli.main(["decompress", str(path), str(out), "--field", "t"]) == 0
     np.testing.assert_array_equal(np.load(out), np.asarray(a))
-    with pytest.raises(SystemExit, match="pick one with --field"):
+    # usage errors print to stderr and exit 2 (the normalized CLI contract)
+    with pytest.raises(SystemExit) as ei:
         cli.main(["decompress", str(path), str(out)])
-    with pytest.raises(SystemExit, match="no field"):
+    assert ei.value.code == 2
+    assert "pick one with --field" in capsys.readouterr().err
+    with pytest.raises(SystemExit) as ei:
         cli.main(["decompress", str(path), str(out), "--field", "nope"])
-    with pytest.raises(SystemExit, match="--field only applies"):
+    assert ei.value.code == 2
+    assert "no field" in capsys.readouterr().err
+    with pytest.raises(SystemExit) as ei:
         out2 = tmp_path / "m.szjx"
         api.save(out2, a)
         cli.main(["decompress", str(out2), str(out), "--field", "t"])
+    assert ei.value.code == 2
+    assert "--field only applies" in capsys.readouterr().err
     assert cli.parse_roi("8:40,:,16:32") == (slice(8, 40), slice(None), slice(16, 32))
     assert cli.parse_roi("3,::2") == (3, slice(None, None, 2))
     with pytest.raises(ValueError):

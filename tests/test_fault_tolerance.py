@@ -408,4 +408,7 @@ def test_cli_verify_good_and_corrupt(tmp_path, container):
     assert cli.main(["verify", str(out)]) == 0
     lanes_start = tiled._HDR_V3.size + 16 * 3
     bad = _flip(out, tmp_path, lanes_start + 11)
-    assert cli.main(["verify", str(bad)]) == 1
+    # corrupt container: integrity exit code 1 (normalized CLI contract)
+    with pytest.raises(SystemExit) as ei:
+        cli.main(["verify", str(bad)])
+    assert ei.value.code == 1
