@@ -48,6 +48,73 @@ def _entropy_stage_bench() -> None:
          f"speedup_vs_seed={us_old/us_new:.1f}x;overhead={(len(blob_new)/len(blob_old)-1)*100:.2f}%")
 
 
+def _entropy_device_bench() -> None:
+    """Device (Pallas) Huffman encode/decode vs the host codec on the same
+    code tensor, byte-identity asserted (the ISSUE 8 acceptance rows).
+
+    Off-TPU the kernels run in interpret mode, so the speedup column
+    characterizes the dispatch path, not silicon; on TPU the same rows
+    report the compiled device throughput.  The stream rows compare the
+    executor's per-batch host-stage time with lane packing on the device
+    stage vs on the host stage."""
+    import os
+    import tempfile
+
+    from repro.exec import stream_compress
+
+    x = jnp.asarray(nyx_like_field(ENTROPY_VOLUME, "temperature", seed=3))
+    eb = 1e-3 * float(jnp.max(x) - jnp.min(x))
+    codes = np.asarray(ops.lorenzo_quant_op(x, eb, use_pallas=False))
+    raw_mb = codes.size * 4
+
+    blob_host, us_he = timed(
+        lambda: encode_codes(codes, "huffman", use_pallas=False), repeats=3)
+    blob_dev, us_de = timed(
+        lambda: encode_codes(codes, "huffman", use_pallas=True), repeats=3)
+    assert blob_dev == blob_host, "device blob must be bit-identical to host"
+    emit("throughput/entropy/device/encode", us_de,
+         f"MBps={raw_mb/us_de:.1f};host_MBps={raw_mb/us_he:.1f};"
+         f"speedup_vs_host={us_he/us_de:.2f}x")
+
+    out_host, us_hd = timed(
+        lambda: decode_codes(blob_host, codes.shape, use_pallas=False), repeats=3)
+    out_dev, us_dd = timed(
+        lambda: decode_codes(blob_host, codes.shape, use_pallas=True), repeats=3)
+    assert np.array_equal(out_dev, codes) and np.array_equal(out_host, codes)
+    emit("throughput/entropy/device/decode", us_dd,
+         f"MBps={raw_mb/us_dd:.1f};host_MBps={raw_mb/us_hd:.1f};"
+         f"speedup_vs_host={us_hd/us_dd:.2f}x")
+
+    # streaming executor: host-stage time with device vs host lane packing
+    xs = np.asarray(nyx_like_field(TILED_VOLUME, "temperature", seed=11),
+                    np.float32)
+    src = tempfile.mktemp(suffix=".npy")
+    np.save(src, xs)
+    try:
+        outs = {}
+        for label, dev in (("host", False), ("device", True)):
+            out = tempfile.mktemp(suffix=".gwtc")
+            rep, us = timed(lambda: stream_compress(
+                src, out, tile=TILED_TILE, rel_eb=1e-3, predictor="lorenzo",
+                mem_budget=max(xs.nbytes // 4, 1 << 20), use_pallas=dev),
+                repeats=1)
+            outs[label] = (out, rep, us)
+        (out_h, rep_h, us_h), (out_d, rep_d, us_d) = outs["host"], outs["device"]
+        assert rep_d.entropy_device and not rep_h.entropy_device
+        assert open(out_h, "rb").read() == open(out_d, "rb").read(), \
+            "device-packed container must be bit-identical to the host one"
+        emit("throughput/entropy/device/stream_host_stage",
+             rep_d.host_stage_s * 1e6,
+             f"host_path_stage_s={rep_h.host_stage_s:.4f};"
+             f"device_path_stage_s={rep_d.host_stage_s:.4f};"
+             f"stage_reduction={rep_h.host_stage_s/max(rep_d.host_stage_s, 1e-9):.1f}x;"
+             f"batches={rep_d.n_batches}")
+        os.unlink(out_h)
+        os.unlink(out_d)
+    finally:
+        os.unlink(src)
+
+
 def _tiled_bench() -> None:
     """Tiled engine THROUGH THE FAÇADE (`api.compress` + handle slicing):
     compress, full decode, and single-tile region decode per registered
@@ -229,6 +296,7 @@ def main() -> None:
             emit(f"throughput/entropy_decode/{pred}/{backend}", us, f"MBps={codes_mb/us:.1f}")
 
     _entropy_stage_bench()
+    _entropy_device_bench()
     _tiled_bench()
     _stream_bench()
     _verify_overhead_bench()

@@ -30,6 +30,7 @@ from __future__ import annotations
 import os
 import resource
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 
@@ -83,6 +84,11 @@ class StreamReport:
     retries: int = 0
     failed_batches: tuple[int, ...] = field(default_factory=tuple)
     resumed_batches: int = 0
+    # entropy-stage accounting: whether lane packing ran in the device stage
+    # (Pallas Huffman kernels) and total wall time the host stage spent —
+    # with device entropy the host stage shrinks to container append+commit
+    host_stage_s: float = 0.0
+    entropy_device: bool = False
 
     @property
     def peak_over_budget(self) -> float:
@@ -173,14 +179,20 @@ def stream_compress(
     from repro.sz.predictor import get_predictor
     from repro.sz.tiled import normalize_tile
 
+    from repro.sz.entropy import _accel_default
+
     retry = retry if retry is not None else RetryPolicy()
     src = as_source(source, shape=shape)
     tile = normalize_tile(tile, len(src.shape))
     eb = _resolve_eb_streaming(src, rel_eb, abs_eb)
     pred = get_predictor(predictor)
     levels = pred.plan(tile, max_levels)
+    # device entropy moves lane packing into the device stage, so the host
+    # stage shrinks to container append + commit (same auto-detect rule as
+    # the entropy layer; bytes are bit-identical either way)
+    device_entropy = _accel_default() if use_pallas is None else bool(use_pallas)
     plan = plan_stream(src.shape, tile, mem_budget, predictor=predictor,
-                       levels=levels)
+                       levels=levels, device_entropy=device_entropy)
     want = (plan.shape, plan.tile, eb, backend, predictor, order, levels)
 
     start_tile, resumed_batches = 0, 0
@@ -248,7 +260,15 @@ def stream_compress(
                 failed_batches.add(bidx)
         return cb
 
-    def host_stage(payload_np, ids, bidx: int, nbytes_held: int) -> None:
+    host_time_lock = threading.Lock()
+    host_stage_s = 0.0
+
+    def host_stage(payload_np, ids, bidx: int, nbytes_held: int,
+                   blobs=None) -> None:
+        """``blobs`` set means the device stage already packed the lanes —
+        the host stage is pure container append + commit."""
+        nonlocal host_stage_s
+        t0 = time.perf_counter()
         try:
             def append_batch():
                 if writer.can_rollback:
@@ -258,7 +278,9 @@ def stream_compress(
                 for j in range(len(ids)):
                     if write_injector is not None:
                         write_injector.maybe_fail(ids[j])
-                    writer.append_lane(pred.lane_bytes(payload_np, j, backend))
+                    writer.append_lane(
+                        blobs[j] if blobs is not None
+                        else pred.lane_bytes(payload_np, j, backend))
                 writer.commit()
 
             if writer.can_rollback:
@@ -267,6 +289,8 @@ def stream_compress(
                 append_batch()  # shared sink: no safe replay, fail fast
         finally:
             mem.sub(nbytes_held)
+            with host_time_lock:
+                host_stage_s += time.perf_counter() - t0
 
     try:
         for bidx, run in enumerate(plan.batches(start_tile),
@@ -293,6 +317,14 @@ def stream_compress(
             payload, recon = retry.run(encode, on_retry=note_retry(bidx))
             payload_np = jax.tree.map(np.asarray, payload)
             held = sum(leaf.nbytes for leaf in jax.tree.leaves(payload_np))
+            blobs = None
+            if device_entropy:
+                # device stage emits the packed lane bytes directly (Pallas
+                # encode kernel); only the lanes actually written, not the
+                # batch's repeat padding
+                blobs = pred.lane_bytes_batch(payload_np, len(ids), backend,
+                                              use_pallas=True)
+                held += sum(len(b) for b in blobs)
             mem.add(held)
             if reservoir is not None:
                 recon_np = np.asarray(recon)[: len(ids)]
@@ -305,8 +337,9 @@ def stream_compress(
             del batch
             if pending is not None:
                 pending.result()  # cap in-flight host work at one batch
-            pending = pool.submit(host_stage, payload_np, ids, bidx, held)
-            del payload, payload_np
+            pending = pool.submit(host_stage, payload_np, ids, bidx, held,
+                                  blobs)
+            del payload, payload_np, blobs
         if pending is not None:
             pending.result()
             pending = None
@@ -360,4 +393,6 @@ def stream_compress(
         retries=retries,
         failed_batches=tuple(sorted(failed_batches)),
         resumed_batches=resumed_batches,
+        host_stage_s=host_stage_s,
+        entropy_device=device_entropy,
     )

@@ -20,16 +20,21 @@ from repro.sz.predictor import _padded_shape
 from repro.sz.tiled import tile_grid
 
 
-def tile_working_bytes(tile: tuple[int, ...], predictor: str, levels: int) -> int:
+def tile_working_bytes(tile: tuple[int, ...], predictor: str, levels: int,
+                       *, device_entropy: bool = False) -> int:
     """Conservative per-tile working-set estimate for one streamed tile:
-    f32 input + the predictor's payload leaves + its recon."""
+    f32 input + the predictor's payload leaves + its recon.
+
+    ``device_entropy`` adds the Pallas encode-pack words (one u32 lane per
+    symbol, held until the host stage splices the lane blob)."""
     t = int(np.prod(tile))
+    extra = 4 * t if device_entropy else 0
     if predictor == "interp":
         p = int(np.prod(_padded_shape(tile, levels)))
         # codes i32 + omask bool + ovals f32 + recon f32 on the padded grid
-        return 4 * t + 13 * p
+        return 4 * t + 13 * p + extra
     # lorenzo: codes i32 + recon f32 on the tile grid
-    return 4 * t + 8 * t
+    return 4 * t + 8 * t + extra
 
 
 def max_inflight_tiles(
@@ -61,6 +66,7 @@ class StreamPlan:
     batch_tiles: int  # uniform device-batch width
     mem_budget: int
     tile_bytes: int  # per-tile working-set estimate
+    device_entropy: bool = False  # lane packing runs in the device stage
 
     @property
     def n_batches(self) -> int:
@@ -99,6 +105,7 @@ def plan_stream(
     predictor: str = "lorenzo",
     levels: int = 0,
     devices: int | None = None,
+    device_entropy: bool = False,
 ) -> StreamPlan:
     """Size tile batches so ~two in-flight batches fit the byte budget.
 
@@ -109,10 +116,12 @@ def plan_stream(
 
     grid = tile_grid(shape, tile)
     n_tiles = int(np.prod(grid))
-    per = tile_working_bytes(tile, predictor, levels)
+    per = tile_working_bytes(tile, predictor, levels,
+                             device_entropy=device_entropy)
     batch = max(1, int(mem_budget) // (2 * per))
     batch = min(batch, n_tiles)
     batch = device_round(batch, devices)
     return StreamPlan(shape=tuple(shape), tile=tuple(tile), grid=grid,
                       n_tiles=n_tiles, batch_tiles=batch,
-                      mem_budget=int(mem_budget), tile_bytes=per)
+                      mem_budget=int(mem_budget), tile_bytes=per,
+                      device_entropy=device_entropy)

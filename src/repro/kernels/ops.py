@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.enhancer_fused import enhancer_fused
 from repro.kernels.group_hist import group_hist, symbol_hist
+from repro.kernels.huffman_decode import huffman_decode_probe
+from repro.kernels.huffman_encode import huffman_encode_pack
 from repro.kernels.lorenzo_quant import lorenzo_quant, lorenzo_quant_tiles
 
 
@@ -97,6 +99,43 @@ def symbol_hist_op(symbols, *, n_bins: int, use_pallas: bool | None = None,
     else:
         hist = ref.symbol_hist_ref(x2, bins)
     return hist[:n_bins]
+
+
+def huffman_encode_op(lens, codes, *, use_pallas: bool | None = None,
+                      interpret: bool | None = None):
+    """Chunk-parallel canonical-Huffman encode pack.
+
+    lens/codes: [C, CS] int32 per-chunk code lengths / codewords (0-length
+    marks the pad slots of a short last chunk).  Returns (words [C, CS]
+    int32 — each chunk's bit stream MSB-first across big-endian u32 lanes,
+    chunk_bits [C] int32).  The entropy layer splices chunks into the
+    continuous hc/hZ stream on host (``sz/entropy.py``)."""
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return huffman_encode_pack(
+            lens, codes, interpret=not _on_tpu() if interpret is None else interpret)
+    return ref.huffman_encode_ref(lens, codes)
+
+
+def huffman_decode_op(words, offsets, counts, lut_count, lut_bits, lut_ids,
+                      cw_map, order, len_sorted, *, chunk_size: int, k: int,
+                      use_pallas: bool | None = None,
+                      interpret: bool | None = None):
+    """Lockstep multi-symbol-LUT Huffman decode probe.
+
+    words: [NW] int32 big-endian u32 stream words (>= 2 zero tail words);
+    offsets/counts: [C] int32; tables from
+    ``HuffmanCodec._device_tables``.  Returns alphabet ids [C, chunk_size]
+    int32 (zero-padded past each chunk's count)."""
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return huffman_decode_probe(
+            words, offsets, counts, lut_count, lut_bits, lut_ids, cw_map,
+            order, len_sorted, chunk_size=chunk_size, k=k,
+            interpret=not _on_tpu() if interpret is None else interpret)
+    return ref.huffman_decode_ref(words, offsets, counts, lut_count, lut_bits,
+                                  lut_ids, cw_map, order, len_sorted,
+                                  chunk_size=chunk_size, k=k)
 
 
 def group_hist_op(x, edges, *, n_groups: int, use_pallas: bool | None = None,

@@ -44,6 +44,27 @@ def symbol_hist_ref(s: jax.Array, n_bins: int) -> jax.Array:
     return jnp.zeros((n_bins,), jnp.int32).at[s.ravel()].add(1)
 
 
+def huffman_encode_ref(lens: jax.Array, codes: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Chunk-parallel Huffman encode pack. lens/codes: [C, CS] int32 (0-len =
+    pad slot).  Returns (words [C, CS] int32, chunk_bits [C] int32) — the
+    same block body the Pallas kernel runs, applied to the whole batch."""
+    from repro.kernels.huffman_encode import _encode_block
+
+    words, totals = _encode_block(lens, codes, lens.shape[1])
+    return words, totals[:, 0]
+
+
+def huffman_decode_ref(words, offsets, counts, lut_count, lut_bits, lut_ids,
+                       cw_map, order, len_sorted, *, chunk_size: int,
+                       k: int) -> jax.Array:
+    """Lockstep multi-symbol LUT decode probe over all chunks at once.
+    Returns alphabet ids [C, chunk_size] int32."""
+    from repro.kernels.huffman_decode import _decode_block
+
+    return _decode_block(words, offsets, counts, lut_count, lut_bits, lut_ids,
+                         cw_map, order, len_sorted, chunk_size=chunk_size, k=k)
+
+
 def group_hist_ref(x: jax.Array, edges: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Group-id assignment + histogram. x: [N, 128]; edges: [G+1].
 

@@ -30,6 +30,7 @@ hit-rate: ``benchmarks/serve_load.py``.
 """
 from __future__ import annotations
 
+import hashlib
 import io
 import json
 import threading
@@ -132,6 +133,7 @@ class _Metrics:
         self.started = time.monotonic()
         self.requests = 0
         self.errors = 0
+        self.not_modified = 0
         self.lanes_served = 0
         self.per_volume: dict[str, int] = {}
         self._latency_ms: deque[float] = deque(maxlen=_LATENCY_WINDOW)
@@ -143,6 +145,14 @@ class _Metrics:
             self.per_volume[name] = self.per_volume.get(name, 0) + 1
             self._latency_ms.append(latency_ms)
 
+    def record_not_modified(self, name: str) -> None:
+        """An ETag revalidation hit: the request was answered 304 with no
+        decode and no latency sample (nothing ran)."""
+        with self._lock:
+            self.requests += 1
+            self.not_modified += 1
+            self.per_volume[name] = self.per_volume.get(name, 0) + 1
+
     def record_error(self) -> None:
         with self._lock:
             self.errors += 1
@@ -152,6 +162,7 @@ class _Metrics:
             lat = np.asarray(self._latency_ms, np.float64)
             out = {"uptime_s": time.monotonic() - self.started,
                    "requests": self.requests, "errors": self.errors,
+                   "not_modified": self.not_modified,
                    "lanes_served": self.lanes_served,
                    "per_volume_requests": dict(self.per_volume)}
         if lat.size:
@@ -186,6 +197,7 @@ class VolumePool:
                              fill_value=fill_value)
         self._volumes: dict[str, api.CompressedVolume] = {}
         self._owned: set[str] = set()
+        self._etag_seeds: dict[str, str] = {}
         self._lock = threading.Lock()
         for name, spec in dict(volumes or {}).items():
             self.add_volume(name, spec)
@@ -234,6 +246,48 @@ class VolumePool:
             per = tile_working_bytes(art.tile, art.predictor, art.levels)
             return n_lanes * per
         return 3 * int(np.prod(art.shape)) * 4  # monolithic: full decode
+
+    def _etag_seed(self, name: str, vol: api.CompressedVolume) -> str:
+        """Per-volume ETag seed: container identity (shape, byte size, eb,
+        codec settings, and the footer lane CRCs when present — those pin the
+        actual lane bytes).  Computed once per registered volume."""
+        with self._lock:
+            cached = self._etag_seeds.get(name)
+        if cached is not None:
+            return cached
+        art = vol.artifact
+        h = hashlib.sha1()
+        h.update(repr((name, tuple(vol.shape), int(vol.nbytes),
+                       float(vol.eb_abs))).encode())
+        if isinstance(art, TiledCompressed):
+            h.update(repr((art.predictor, art.backend, art.order,
+                           art.levels, tuple(art.tile))).encode())
+            if art.lane_crcs is not None:
+                h.update(np.asarray(art.lane_crcs, np.uint32).tobytes())
+        seed = h.hexdigest()
+        with self._lock:
+            self._etag_seeds[name] = seed
+        return seed
+
+    def region_etag(self, name: str, roi) -> tuple[str, tuple]:
+        """Strong ETag for ``GET /v/<name>/region``: hash of the volume's
+        container identity, the *canonical* ROI (so ``"0:8"`` and ``":8"``
+        revalidate each other), and the entropy codec path.  Returns
+        ``(etag, parsed_roi)``; raises like :meth:`region` on bad input."""
+        from repro.sz.entropy import _accel_default
+        from repro.sz.tiled import normalize_roi
+
+        vol = self.volume(name)
+        if isinstance(roi, str):
+            from repro.cli import parse_roi
+
+            roi = parse_roi(roi)
+        canon = normalize_roi(roi, tuple(vol.shape))
+        codec_path = "pallas" if _accel_default() else "host"
+        digest = hashlib.sha1(
+            f"{self._etag_seed(name, vol)}|{canon}|{codec_path}".encode()
+        ).hexdigest()
+        return f'"{digest[:32]}"', roi
 
     def region(self, name: str, roi) -> tuple[np.ndarray, dict]:
         """Decode ``vol[roi]`` under admission control.
@@ -377,11 +431,20 @@ class _Handler(BaseHTTPRequestHandler):
         if roi is None:
             return self._error(400, "region requires ?roi=, e.g. "
                                     "roi=8:40,:,16:32")
-        block, meta = pool.region(name, roi)
+        # ETag revalidation runs BEFORE admission/decode: a repeated ROI
+        # costs one hash, not a region decode
+        etag, parsed = pool.region_etag(name, roi)
+        inm = self.headers.get("If-None-Match")
+        if inm is not None and (inm.strip() == "*" or
+                                etag in (v.strip() for v in inm.split(","))):
+            pool.metrics.record_not_modified(name)
+            return self._send(304, b"", "application/x-npy",
+                              headers={"ETag": etag})
+        block, meta = pool.region(name, parsed)
         buf = io.BytesIO()
         np.save(buf, np.ascontiguousarray(block))
         self._send(200, buf.getvalue(), "application/x-npy",
-                   headers={"X-Repro-Meta": json.dumps(meta)})
+                   headers={"X-Repro-Meta": json.dumps(meta), "ETag": etag})
 
 
 class _ThreadingServer(ThreadingHTTPServer):
@@ -442,18 +505,27 @@ class RegionServer:
         self.stop()
 
 
-def fetch_region(url: str, name: str, roi: str, timeout: float = 60.0):
+def fetch_region(url: str, name: str, roi: str, timeout: float = 60.0,
+                 etag: str | None = None):
     """Tiny stdlib client for tests/benchmarks: GET a region and parse the
-    ``.npy`` payload.  Returns ``(array, meta_dict)``; raises
-    ``RuntimeError`` with the server's error message on non-200."""
+    ``.npy`` payload.  Returns ``(array, meta_dict)`` — ``meta["etag"]``
+    carries the response ETag; pass it back as ``etag=`` to revalidate,
+    which returns ``(None, meta)`` on a 304.  Raises ``RuntimeError`` with
+    the server's error message on other non-200s."""
     from urllib.error import HTTPError
-    from urllib.request import urlopen
+    from urllib.request import Request, urlopen
 
+    req = Request(f"{url}/v/{name}/region?roi={roi}")
+    if etag is not None:
+        req.add_header("If-None-Match", etag)
     try:
-        with urlopen(f"{url}/v/{name}/region?roi={roi}", timeout=timeout) as r:
+        with urlopen(req, timeout=timeout) as r:
             meta = json.loads(r.headers.get("X-Repro-Meta", "{}"))
+            meta["etag"] = r.headers.get("ETag")
             arr = np.load(io.BytesIO(r.read()))
     except HTTPError as e:
+        if e.code == 304:
+            return None, {"etag": e.headers.get("ETag")}
         detail = e.read().decode(errors="replace").strip()
         raise RuntimeError(f"region {name!r} roi={roi!r}: "
                            f"HTTP {e.code}: {detail}") from None

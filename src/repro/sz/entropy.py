@@ -46,10 +46,24 @@ def _chunk_bits_dtype(chunk_size: int) -> str:
 
 
 def shannon_bits(symbols: np.ndarray) -> float:
-    """Ideal entropy-coded size in bits (lower bound for any entropy coder)."""
-    _, counts = np.unique(symbols, return_counts=True)
+    """Ideal entropy-coded size in bits (lower bound for any entropy coder).
+
+    Dense integer alphabets count through ``bincount`` (O(n)) exactly like
+    ``HuffmanCodec.fit``; only sparse/float inputs pay the ``np.unique``
+    sort."""
+    flat = np.asarray(symbols).ravel()
+    if flat.size == 0:
+        return 0.0
+    counts = None
+    if np.issubdtype(flat.dtype, np.integer):
+        lo, hi = int(flat.min()), int(flat.max())
+        if hi - lo + 1 <= _DENSE_SPAN:
+            counts = np.bincount(flat.astype(np.int64) - lo)
+            counts = counts[counts > 0]
+    if counts is None:
+        _, counts = np.unique(flat, return_counts=True)
     p = counts / counts.sum()
-    return float(-(p * np.log2(p)).sum() * symbols.size)
+    return float(-(p * np.log2(p)).sum() * flat.size)
 
 
 # ---------------------------------------------------------------------------
@@ -126,6 +140,34 @@ def _accel_hist(flat: np.ndarray, lo: int, span: int) -> np.ndarray:
 
     shifted = jnp.asarray((flat.astype(np.int64) - lo).astype(np.int32))
     return np.asarray(ops.symbol_hist_op(shifted, n_bins=span), np.int64)
+
+
+def _splice_chunks(local: np.ndarray, chunk_bits: np.ndarray) -> tuple[bytes, int]:
+    """Concatenate per-chunk word-packed bit streams into one continuous
+    MSB-first byte stream (hc/hZ chunks are *not* byte-aligned).
+
+    ``local`` is the device pack output viewed as uint32 [C, W]: chunk c's
+    bits live MSB-first in its first ``ceil(chunk_bits[c]/32)`` words, zeros
+    beyond.  Each chunk's words shift right by its global bit offset mod 32
+    (the spill re-split mirrors the kernel's two-step shifts), then land at
+    word index offset>>5.  Adjacent chunks overlap in at most one boundary
+    word with disjoint bits, so the scatter-OR is one exact float64
+    ``bincount`` sum.  Output matches ``np.packbits`` byte-for-byte."""
+    C, W = local.shape
+    ends = np.cumsum(chunk_bits, dtype=np.int64)
+    total = int(ends[-1]) if C else 0
+    offs = ends - chunk_bits
+    sh = (offs & 31).astype(np.uint32)[:, None]
+    shifted = np.zeros((C, W + 1), np.uint32)
+    shifted[:, :W] = local >> sh
+    shifted[:, 1:] |= (local << (np.uint32(31) - sh)) << np.uint32(1)
+    idx = (offs >> 5)[:, None] + np.arange(W + 1, dtype=np.int64)
+    nwords = (total + 31) // 32
+    out = np.bincount(idx.ravel(), weights=shifted.ravel().astype(np.float64),
+                      minlength=nwords + 1)[:nwords]
+    # disjoint bits per word => every float64 sum is exact and fits in u32
+    stream = out.astype(np.int64).astype(np.uint32).astype(">u4").tobytes()
+    return stream[: (total + 7) // 8], total
 
 
 # ---------------------------------------------------------------------------
@@ -523,6 +565,141 @@ class HuffmanCodec:
         return self.alphabet[_expand_entries(used, counts, n_symbols,
                                              mtables.B, mtables.S)]
 
+    # -- device (Pallas) pack / decode ---------------------------------------
+    def _device_eligible(self) -> bool:
+        """hc/hZ device kernels work in 32-bit windows: every code length must
+        fit (true for any freshly fitted codec by encoder policy; crafted
+        legacy tables can exceed it and stay on host)."""
+        n = len(self.alphabet)
+        return 0 < n < (1 << 31) and int(self.lengths.max()) <= 32
+
+    def _device_tables(self):
+        """Multi-symbol LUT split into parallel int32 arrays for the decode
+        kernel (packed uint64 entries have no device analogue).  Cached;
+        ``None`` when the codec is device-ineligible."""
+        cached = getattr(self, "_dev_tables", None)
+        if cached is not None:
+            return cached or None
+        if not self._device_eligible():
+            self._dev_tables = False
+            return None
+        mt = self._multi_tables()
+        t = mt.tables
+        base = _id_shift0(mt.B)
+        mask = np.uint64((1 << mt.B) - 1)
+        lut_ids = np.stack([
+            ((mt.mlut >> np.uint64(base + j * mt.B)) & mask).astype(np.int32)
+            for j in range(mt.S)])
+        # top-32 truncation is faithful: codes occupy the top <= 32 bits, so
+        # interval boundaries only depend on the window's top 32 bits, and
+        # the XOR maps unsigned order onto int32 for the kernel's compares
+        cw32 = (t.cw_left >> np.uint64(32)).astype(np.uint32)
+        dev = {
+            "lut_count": (mt.mlut & np.uint64(0xFF)).astype(np.int32),
+            "lut_bits": ((mt.mlut >> np.uint64(8)) & np.uint64(0xFF)).astype(np.int32),
+            "lut_ids": lut_ids,
+            "cw_map": (cw32 ^ np.uint32(0x80000000)).view(np.int32),
+            "order": t.order.astype(np.int32),
+            "len_sorted": t.L_sorted.astype(np.int32),
+            "k": t.k,
+        }
+        self._dev_tables = dev
+        return dev
+
+    def _device_pack(self, flat: np.ndarray, chunk_size: int, *,
+                     interpret: bool | None = None):
+        """Device encode-pack: returns (stream bytes, chunk_bits int64, total)
+        bit-identical to ``_encode_bits`` + the encode-side chunk table, or
+        ``None`` when ineligible (caller falls back to the host pack)."""
+        n = flat.size
+        if n == 0 or not self._device_eligible() or chunk_size * 32 >= 1 << 31:
+            return None
+        import jax.numpy as jnp
+
+        from repro.kernels import ops
+
+        # same one-shot fit-time remap contract as _encode_bits
+        inv = self.__dict__.pop("_inv", None)
+        if inv is None or inv.size != n:
+            inv = np.searchsorted(self.alphabet, flat)
+        C = -(-n // chunk_size)
+        pad = C * chunk_size - n
+        lens = self.lengths[inv].astype(np.int32)
+        cws = self.codes[inv].astype(np.uint32).view(np.int32)
+        if pad:
+            lens = np.concatenate([lens, np.zeros(pad, np.int32)])
+            cws = np.concatenate([cws, np.zeros(pad, np.int32)])
+        words, chunk_bits = ops.huffman_encode_op(
+            jnp.asarray(lens.reshape(C, chunk_size)),
+            jnp.asarray(cws.reshape(C, chunk_size)),
+            use_pallas=True, interpret=interpret)
+        stream, total = _splice_chunks(
+            np.asarray(words).view(np.uint32),
+            np.asarray(chunk_bits).astype(np.int64))
+        return stream, np.asarray(chunk_bits).astype(np.int64), total
+
+    def decode_chunked_device(
+        self,
+        stream: bytes,
+        n_symbols: int,
+        chunk_size: int,
+        chunk_bits: np.ndarray,
+        *,
+        total_bits: int | None = None,
+        chunk_range: tuple[int, int] | None = None,
+        interpret: bool | None = None,
+    ) -> np.ndarray | None:
+        """Same contract as :meth:`decode_chunked`, running the lockstep
+        multi-symbol LUT probe as a Pallas kernel.  Returns ``None`` when the
+        codec or stream is device-ineligible (caller falls back to host)."""
+        if n_symbols == 0:
+            return self.alphabet[:0].copy()
+        if self.alphabet.size == 0:
+            raise ValueError("empty codec cannot decode a nonempty stream")
+        chunk_bits = np.asarray(chunk_bits, np.int64)
+        C = chunk_bits.size
+        if C != -(-n_symbols // chunk_size):
+            raise ValueError("chunk table size inconsistent with symbol count")
+        ends = np.cumsum(chunk_bits)
+        total = int(ends[-1])
+        if total_bits is not None and total != total_bits:
+            raise ValueError("chunk table inconsistent with stream length")
+        dev = self._device_tables()
+        # int32 bit positions bound the eligible stream/chunk size
+        if dev is None or total >= 1 << 31 or chunk_size * 32 >= 1 << 31:
+            return None
+        if len(stream) < (total + 7) // 8:
+            raise ValueError("truncated Huffman stream")
+        offsets = (ends - chunk_bits).astype(np.int32)
+        counts = np.full(C, chunk_size, np.int32)
+        counts[-1] = n_symbols - chunk_size * (C - 1)
+        if chunk_range is not None:
+            c0, c1 = chunk_range
+            if not 0 <= c0 < c1 <= C:
+                raise ValueError(f"chunk range {chunk_range} outside [0, {C})")
+            offsets, counts = offsets[c0:c1], counts[c0:c1]
+            n_symbols = int(counts.sum())
+        import jax.numpy as jnp
+
+        from repro.kernels import ops
+
+        raw = np.frombuffer(stream, np.uint8)
+        # pad to a word boundary + 2 zero tail words for the wi+1 gather
+        padded = np.zeros(raw.size + (-raw.size) % 4 + 8, np.uint8)
+        padded[: raw.size] = raw
+        words = padded.view(">u4").astype(np.uint32).view(np.int32)
+        ids = ops.huffman_decode_op(
+            jnp.asarray(words), jnp.asarray(offsets), jnp.asarray(counts),
+            jnp.asarray(dev["lut_count"]), jnp.asarray(dev["lut_bits"]),
+            jnp.asarray(dev["lut_ids"]), jnp.asarray(dev["cw_map"]),
+            jnp.asarray(dev["order"]), jnp.asarray(dev["len_sorted"]),
+            chunk_size=chunk_size, k=dev["k"],
+            use_pallas=True, interpret=interpret)
+        # only the last selected chunk can be short, so row-major flatten +
+        # truncate is exactly the symbol stream
+        flat_ids = np.asarray(ids).reshape(-1)[:n_symbols]
+        return self.alphabet[flat_ids]
+
     # -- serialization --------------------------------------------------------
     def table_bytes(self) -> bytes:
         return (
@@ -553,12 +730,19 @@ def encode_codes(
     *,
     chunk_size: int | None = None,
     use_accel: bool | None = None,
+    use_pallas: bool | None = None,
 ) -> bytes:
     """Entropy-encode an int32 code tensor; returns a self-describing blob.
 
     Huffman backends emit the chunked ``hc``/``hcz`` format (see
     docs/ENTROPY_FORMAT.md); ``encode_codes_legacy`` still produces the seed
-    ``hf``/``hz`` blobs for compatibility testing."""
+    ``hf``/``hz`` blobs for compatibility testing.
+
+    ``use_pallas`` routes the bit-stream pack through the device encode
+    kernel (``kernels/huffman_encode.py``): ``None`` auto-detects (device
+    path on TPU only), ``True`` forces it (interpret mode off-TPU), ``False``
+    keeps the host pack.  Bytes are bit-identical either way — device-
+    ineligible codecs silently fall back to host."""
     flat = np.ascontiguousarray(codes, np.int32).ravel()
     if backend == "zlib":
         # int32 -> int16 when it fits (usual case): halves the zlib input
@@ -571,17 +755,23 @@ def encode_codes(
         return _MAGIC + tag + struct.pack("<Q", flat.size) + payload
     if backend in ("huffman", "huffman+zlib"):
         codec = HuffmanCodec.fit(flat, use_accel=use_accel)
-        packed, ends, total = codec._encode_bits(flat)
         cs = int(chunk_size) if chunk_size else DEFAULT_CHUNK
         n = flat.size
         n_chunks = -(-n // cs) if n else 0
-        if n_chunks:
-            bnd = np.minimum(np.arange(1, n_chunks + 1, dtype=np.int64) * cs, n) - 1
-            chunk_bits = np.diff(np.concatenate([[0], ends[bnd]]))
+        dev = _accel_default() if use_pallas is None else use_pallas
+        got = codec._device_pack(flat, cs) if dev and n_chunks else None
+        if got is not None:
+            stream, chunk_bits, total = got
         else:
-            chunk_bits = np.zeros(0, np.int64)
+            packed, ends, total = codec._encode_bits(flat)
+            if n_chunks:
+                bnd = np.minimum(np.arange(1, n_chunks + 1, dtype=np.int64) * cs, n) - 1
+                chunk_bits = np.diff(np.concatenate([[0], ends[bnd]]))
+            else:
+                chunk_bits = np.zeros(0, np.int64)
+            stream = packed.tobytes()
         # chunk table + bit stream travel together so zlib sees both
-        payload = chunk_bits.astype(_chunk_bits_dtype(cs)).tobytes() + packed.tobytes()
+        payload = chunk_bits.astype(_chunk_bits_dtype(cs)).tobytes() + stream
         if backend == "huffman+zlib":
             payload = zlib.compress(payload, 6)
             tag = b"hZ"
@@ -631,7 +821,14 @@ def _cached_codec(table: bytes) -> HuffmanCodec:
     return codec
 
 
-def decode_codes(blob: bytes, shape: tuple[int, ...], *, workers: int | None = None) -> np.ndarray:
+def decode_codes(blob: bytes, shape: tuple[int, ...], *, workers: int | None = None,
+                 use_pallas: bool | None = None) -> np.ndarray:
+    """Decode an entropy blob back to int32 codes.
+
+    ``use_pallas`` routes chunked hc/hZ streams through the device decode
+    kernel (``kernels/huffman_decode.py``): ``None`` auto-detects (TPU only),
+    ``True`` forces it (interpret mode off-TPU), ``False`` keeps the host
+    walk.  Device-ineligible streams silently fall back to host."""
     assert blob[:4] == _MAGIC, "bad entropy blob"
     tag = blob[4:6]
     if tag in (b"z2", b"z4"):
@@ -652,7 +849,14 @@ def decode_codes(blob: bytes, shape: tuple[int, ...], *, workers: int | None = N
         cb_dtype = _chunk_bits_dtype(cs)
         chunk_bits = np.frombuffer(payload, cb_dtype, n_chunks)
         stream = payload[np.dtype(cb_dtype).itemsize * n_chunks :]
-        out = codec.decode_chunked(stream, n, cs, chunk_bits, total_bits=total, workers=workers)
+        dev = _accel_default() if use_pallas is None else use_pallas
+        out = None
+        if dev:
+            out = codec.decode_chunked_device(stream, n, cs, chunk_bits,
+                                              total_bits=total)
+        if out is None:
+            out = codec.decode_chunked(stream, n, cs, chunk_bits,
+                                       total_bits=total, workers=workers)
         return out.astype(np.int32).reshape(shape)
     if tag in (b"hf", b"hz"):
         n, tlen = struct.unpack_from("<QI", blob, 6)
@@ -665,7 +869,8 @@ def decode_codes(blob: bytes, shape: tuple[int, ...], *, workers: int | None = N
     raise ValueError(f"unknown entropy tag {tag!r}")
 
 
-def decode_codes_range(blob: bytes, lo: int, hi: int, *, workers: int | None = None) -> np.ndarray:
+def decode_codes_range(blob: bytes, lo: int, hi: int, *, workers: int | None = None,
+                       use_pallas: bool | None = None) -> np.ndarray:
     """Decode symbols ``[lo, hi)`` of an entropy blob as a flat int32 array.
 
     On the chunked ``hc``/``hZ`` formats this is a true partial read: only
@@ -695,8 +900,15 @@ def decode_codes_range(blob: bytes, lo: int, hi: int, *, workers: int | None = N
         chunk_bits = np.frombuffer(payload, cb_dtype, n_chunks)
         stream = payload[np.dtype(cb_dtype).itemsize * n_chunks :]
         c0, c1 = lo // cs, -(-hi // cs)
-        out = codec.decode_chunked(stream, n, cs, chunk_bits, total_bits=total,
-                                   workers=workers, chunk_range=(c0, c1))
+        dev = _accel_default() if use_pallas is None else use_pallas
+        out = None
+        if dev:
+            out = codec.decode_chunked_device(stream, n, cs, chunk_bits,
+                                              total_bits=total,
+                                              chunk_range=(c0, c1))
+        if out is None:
+            out = codec.decode_chunked(stream, n, cs, chunk_bits, total_bits=total,
+                                       workers=workers, chunk_range=(c0, c1))
         return out.astype(np.int32)[lo - c0 * cs : hi - c0 * cs]
     flat = decode_codes(blob, (-1,), workers=workers).ravel()
     if not 0 <= lo <= hi <= flat.size:

@@ -310,11 +310,24 @@ class TilePredictor:
         """Payload pytree ([B, ...]) -> recon [B, *tile] float32."""
         raise NotImplementedError
 
-    def lane_bytes(self, payload, i: int, backend: str) -> bytes:
-        """Serialize tile ``i`` of a host-side (numpy) payload to one lane."""
+    def lane_bytes(self, payload, i: int, backend: str, *,
+                   use_pallas: bool | None = None) -> bytes:
+        """Serialize tile ``i`` of a host-side (numpy) payload to one lane.
+
+        ``use_pallas`` routes the entropy pack through the device encode
+        kernel (bytes are bit-identical either way)."""
         raise NotImplementedError
 
-    def parse_lane(self, blob: bytes, *, tile: tuple[int, ...], levels: int) -> dict:
+    def lane_bytes_batch(self, payload, n: int, backend: str, *,
+                         use_pallas: bool | None = None) -> list[bytes]:
+        """Serialize all ``n`` tiles of a payload.  The default loops
+        :meth:`lane_bytes`; the streaming executor's device stage calls this
+        so a predictor can batch the device encode across lanes."""
+        return [self.lane_bytes(payload, i, backend, use_pallas=use_pallas)
+                for i in range(n)]
+
+    def parse_lane(self, blob: bytes, *, tile: tuple[int, ...], levels: int,
+                   use_pallas: bool | None = None) -> dict:
         """Inverse of :meth:`lane_bytes`: one lane -> unbatched payload dict."""
         raise NotImplementedError
 
@@ -350,15 +363,16 @@ class _LorenzoTiles(TilePredictor):
         return sharding.map_tiles(
             lambda c: ops.lorenzo_decode_tiles_op(c, eb), payload["codes"])
 
-    def lane_bytes(self, payload, i, backend):
+    def lane_bytes(self, payload, i, backend, *, use_pallas=None):
         from repro.sz import entropy
 
-        return entropy.encode_codes(payload["codes"][i], backend)
+        return entropy.encode_codes(payload["codes"][i], backend,
+                                    use_pallas=use_pallas)
 
-    def parse_lane(self, blob, *, tile, levels):
+    def parse_lane(self, blob, *, tile, levels, use_pallas=None):
         from repro.sz import entropy
 
-        return {"codes": entropy.decode_codes(blob, tile)}
+        return {"codes": entropy.decode_codes(blob, tile, use_pallas=use_pallas)}
 
 
 # Interp lane layout (inside the GWTC container, docs/TILED_FORMAT.md):
@@ -451,7 +465,7 @@ class _InterpTiles(TilePredictor):
             payload["codes"], payload["omask"], payload["ovals"], eb, levels, order)
         return recon[(slice(None),) + tuple(slice(0, d) for d in tile)]
 
-    def lane_bytes(self, payload, i, backend):
+    def lane_bytes(self, payload, i, backend, *, use_pallas=None):
         import zlib
 
         from repro.sz import entropy
@@ -461,9 +475,10 @@ class _InterpTiles(TilePredictor):
         val = payload["ovals"][i].ravel()[idx].astype(np.float32)
         out = zlib.compress(idx.tobytes() + val.tobytes(), 6)
         return (_INTERP_LANE_HDR.pack(idx.size, len(out)) + out
-                + entropy.encode_codes(payload["codes"][i], backend))
+                + entropy.encode_codes(payload["codes"][i], backend,
+                                       use_pallas=use_pallas))
 
-    def parse_lane(self, blob, *, tile, levels):
+    def parse_lane(self, blob, *, tile, levels, use_pallas=None):
         import zlib
 
         from repro.sz import entropy
@@ -480,7 +495,8 @@ class _InterpTiles(TilePredictor):
         omask[idx] = True
         ovals[idx] = val
         return {
-            "codes": entropy.decode_codes(blob[off + zlen :], pshape),
+            "codes": entropy.decode_codes(blob[off + zlen :], pshape,
+                                          use_pallas=use_pallas),
             "omask": omask.reshape(pshape),
             "ovals": ovals.reshape(pshape),
         }

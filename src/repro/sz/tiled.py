@@ -560,8 +560,9 @@ def compress_tiled(
     recon = stitch_tiles(recon_tiles, tile_grid(x.shape, tile))
 
     payload_np = jax.tree.map(np.asarray, payload)
-    blobs = _map_lanes(lambda i: pred.lane_bytes(payload_np, i, backend),
-                       list(range(tiles.shape[0])), workers)
+    blobs = _map_lanes(
+        lambda i: pred.lane_bytes(payload_np, i, backend, use_pallas=use_pallas),
+        list(range(tiles.shape[0])), workers)
     artifact = TiledCompressed(
         shape=tuple(x.shape), tile=tile, eb_abs=eb, backend=backend,
         tile_blobs=blobs, predictor=predictor, order=order, levels=levels)
@@ -609,7 +610,7 @@ def verify_lanes(artifact: TiledCompressed, lane_ids=None, *,
 
 def decode_lanes(
     artifact: TiledCompressed, lane_ids, *, workers: int | None = None,
-    with_mask: bool = False,
+    with_mask: bool = False, use_pallas: bool | None = None,
 ):
     """Decode the given lanes and reconstruct them; returns
     ``(recon [len(ids), *tile], lanes_decoded)`` — or, with
@@ -632,7 +633,8 @@ def decode_lanes(
     good = [j for j, (i, b) in enumerate(zip(lane_ids, blobs))
             if _check_lane(artifact, i, b)]
     items = _map_lanes(
-        lambda b: pred.parse_lane(b, tile=artifact.tile, levels=artifact.levels),
+        lambda b: pred.parse_lane(b, tile=artifact.tile, levels=artifact.levels,
+                                  use_pallas=use_pallas),
         [blobs[j] for j in good], workers)
     with _STATS_LOCK:
         DECODE_STATS["tiles_decoded"] = len(good)
@@ -654,7 +656,8 @@ def decode_lanes(
 
 
 def decompress_tiled(
-    artifact: TiledCompressed, *, workers: int | None = None, tile_transform=None
+    artifact: TiledCompressed, *, workers: int | None = None, tile_transform=None,
+    use_pallas: bool | None = None,
 ) -> jax.Array:
     """Full decode: every lane, stitched and cropped to the original shape.
 
@@ -662,7 +665,8 @@ def decompress_tiled(
     before stitching (the GWLZ pipeline enhances per tile through it; it must
     act per-tile so region and full decode stay consistent)."""
     recon, _, bad = decode_lanes(artifact, range(artifact.n_tiles),
-                                 workers=workers, with_mask=True)
+                                 workers=workers, with_mask=True,
+                                 use_pallas=use_pallas)
     if tile_transform is not None:
         recon = tile_transform(recon)
         recon = _refill_quarantined(recon, bad, artifact.fill_value)
@@ -726,7 +730,8 @@ def assemble_region(recon, geom, tile: tuple[int, ...]):
 
 
 def decompress_region(
-    artifact: TiledCompressed, roi, *, workers: int | None = None, tile_transform=None
+    artifact: TiledCompressed, roi, *, workers: int | None = None,
+    tile_transform=None, use_pallas: bool | None = None,
 ) -> jax.Array:
     """Decode only the tiles intersecting ``roi``; returns the ROI's values.
 
@@ -736,7 +741,7 @@ def decompress_region(
     this by acting on each tile independently)."""
     ids, geom = region_tiles(artifact, roi)
     recon, _, bad = decode_lanes(artifact, ids.tolist(), workers=workers,
-                                 with_mask=True)
+                                 with_mask=True, use_pallas=use_pallas)
     if tile_transform is not None:
         recon = tile_transform(recon)
         recon = _refill_quarantined(recon, bad, artifact.fill_value)

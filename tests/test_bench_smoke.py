@@ -25,6 +25,15 @@ def test_run_fast_smoke():
     # the entropy-stage rows must be present (perf trajectory anchor)
     assert any(n.startswith("throughput/entropy/hcz_decode") for n in names), names
     assert any(n.startswith("throughput/entropy/decode_speedup") for n in names), names
+    # device entropy rows (ISSUE 8): kernel encode/decode vs host plus the
+    # executor's host-stage shrink, each reporting its speedup column
+    for row in ("throughput/entropy/device/encode",
+                "throughput/entropy/device/decode"):
+        dev_rows = [l for l in lines[1:] if l.split(",")[0] == row]
+        assert dev_rows and "speedup_vs_host=" in dev_rows[0], lines
+    stage_rows = [l for l in lines[1:]
+                  if l.split(",")[0] == "throughput/entropy/device/stream_host_stage"]
+    assert stage_rows and "stage_reduction=" in stage_rows[0], lines
     assert any(n.startswith("throughput/compress/interp/huffman+zlib") for n in names), names
     # the tiled-engine rows must be present for BOTH registered predictors
     # (random-access decode anchor; the tiled path is predictor-pluggable)

@@ -7,6 +7,7 @@ from repro.sz.entropy import (
     DEFAULT_CHUNK,
     HuffmanCodec,
     decode_codes,
+    decode_codes_range,
     encode_codes,
     encode_codes_legacy,
     shannon_bits,
@@ -163,3 +164,140 @@ def test_roundtrip_fuzz():
         for backend in BACKENDS:
             blob = encode_codes(codes, backend)
             np.testing.assert_array_equal(decode_codes(blob, codes.shape), codes)
+
+
+# ---------------------------------------------------------------------------
+# shannon_bits: bincount fast path == np.unique reference (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_shannon_bits_matches_unique_reference():
+    """The dense-alphabet bincount path and the sparse/float unique path must
+    compute the identical entropy (and empty input is 0.0, not NaN)."""
+
+    def want(x):
+        flat = np.asarray(x).ravel()
+        _, counts = np.unique(flat, return_counts=True)
+        p = counts / flat.size
+        return float(-(p * np.log2(p)).sum() * flat.size)
+
+    rng = np.random.default_rng(31)
+    dense_or_sparse = [
+        rng.integers(-500, 500, size=20000).astype(np.int32),  # dense bincount
+        np.full(100, 7, np.int32),                              # one symbol
+        rng.choice([0, 1], size=64).astype(np.int64),
+        np.array([-(2**40), 0, 2**40, 2**40], np.int64),        # sparse span
+        rng.normal(size=3000),                                  # float: unique
+    ]
+    for x in dense_or_sparse:
+        assert shannon_bits(x) == pytest.approx(want(x), rel=1e-12)
+    assert shannon_bits(np.zeros(0, np.int32)) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# device (Pallas interpret) codec path: byte identity with the host pack
+# ---------------------------------------------------------------------------
+
+HUFF_BACKENDS = ("huffman", "huffman+zlib")
+
+
+def _device_cases():
+    rng = np.random.default_rng(21)
+    return {
+        "skewed": rng.choice([0] * 8 + [1, -1, 2, -2, 9], size=6000).astype(np.int32),
+        "wide_alphabet": rng.integers(-600, 600, size=4097).astype(np.int32),
+        "single_symbol": np.full(1234, -3, np.int32),
+        "one_element": np.array([5], np.int32),
+        "empty": np.zeros(0, np.int32),
+    }
+
+
+@pytest.mark.parametrize("cs", [8, 64, DEFAULT_CHUNK])
+@pytest.mark.parametrize("name", list(_device_cases()))
+def test_device_blob_bytes_identical(name, cs):
+    """Device encode must emit the SAME hc/hZ blob as the host pack, and the
+    device decode must invert it — the container format cannot fork on the
+    execution path."""
+    codes = _device_cases()[name]
+    for backend in HUFF_BACKENDS:
+        host = encode_codes(codes, backend, chunk_size=cs, use_pallas=False)
+        dev = encode_codes(codes, backend, chunk_size=cs, use_pallas=True)
+        assert dev == host, f"{name}/{backend}/cs={cs} device blob diverged"
+        np.testing.assert_array_equal(
+            decode_codes(dev, codes.shape, use_pallas=True), codes)
+
+
+@pytest.mark.parametrize("n", [
+    1, 7, DEFAULT_CHUNK - 1, DEFAULT_CHUNK, DEFAULT_CHUNK + 1,
+    4 * DEFAULT_CHUNK - 1, 4 * DEFAULT_CHUNK + 1,
+])
+def test_device_chunk_boundaries(n):
+    """Short last chunks, exact multiples, and one-over lengths all pack to
+    host-identical bytes (the pad lanes must contribute zero bits)."""
+    rng = np.random.default_rng(n)
+    codes = rng.integers(-9, 9, size=n).astype(np.int32)
+    for cs in (8, DEFAULT_CHUNK):
+        host = encode_codes(codes, "huffman", chunk_size=cs, use_pallas=False)
+        dev = encode_codes(codes, "huffman", chunk_size=cs, use_pallas=True)
+        assert dev == host
+        np.testing.assert_array_equal(
+            decode_codes(dev, codes.shape, use_pallas=True), codes)
+
+
+def test_device_escape_path_parity():
+    """Codes longer than the 12-bit LUT must flow through the kernel's
+    binary-search escape and still match the host bytes exactly."""
+    sizes = [2 ** i for i in range(14, 0, -1)] + [1, 1]
+    codes = np.repeat(np.arange(len(sizes), dtype=np.int32), sizes)
+    rng = np.random.default_rng(0)
+    rng.shuffle(codes)
+    codec = HuffmanCodec.fit(codes)
+    assert int(codec.lengths.max()) > 12, "test needs codes longer than the LUT"
+    for backend in HUFF_BACKENDS:
+        host = encode_codes(codes, backend, chunk_size=64, use_pallas=False)
+        dev = encode_codes(codes, backend, chunk_size=64, use_pallas=True)
+        assert dev == host
+        np.testing.assert_array_equal(
+            decode_codes(dev, codes.shape, use_pallas=True), codes)
+
+
+def test_device_decodes_host_blob_and_vice_versa():
+    """Cross-path decode: blobs are one format, so either decoder must accept
+    either encoder's output."""
+    rng = np.random.default_rng(43)
+    codes = rng.choice([0] * 5 + list(range(-15, 15)), size=3000).astype(np.int32)
+    host = encode_codes(codes, "huffman+zlib", use_pallas=False)
+    dev = encode_codes(codes, "huffman+zlib", use_pallas=True)
+    np.testing.assert_array_equal(decode_codes(host, codes.shape, use_pallas=True), codes)
+    np.testing.assert_array_equal(decode_codes(dev, codes.shape, use_pallas=False), codes)
+
+
+def test_device_range_decode_matches_host():
+    """decode_codes_range on the device path == host path == the slice."""
+    rng = np.random.default_rng(17)
+    codes = rng.choice([0] * 6 + list(range(-20, 20)), size=5000).astype(np.int32)
+    blob = encode_codes(codes, "huffman+zlib", chunk_size=64, use_pallas=False)
+    for lo, hi in [(0, 1), (63, 65), (100, 1000), (4990, 5000), (0, 5000),
+                   (777, 777)]:
+        got = decode_codes_range(blob, lo, hi, use_pallas=True)
+        np.testing.assert_array_equal(got, codes[lo:hi])
+        np.testing.assert_array_equal(
+            got, decode_codes_range(blob, lo, hi, use_pallas=False))
+
+
+def test_device_host_fuzz_parity():
+    """Seeded fuzz: random alphabets, skews, lengths, and chunk sizes — the
+    device blob must stay bit-identical and decode must invert."""
+    rng = np.random.default_rng(123)
+    for _ in range(8):
+        n = int(rng.integers(1, 2000))
+        alpha = int(rng.integers(1, 300))
+        p = rng.dirichlet(np.full(alpha, float(rng.uniform(0.05, 2.0))))
+        codes = (rng.choice(alpha, size=n, p=p).astype(np.int32) - alpha // 2)
+        cs = int(rng.choice([8, 32, DEFAULT_CHUNK]))
+        backend = HUFF_BACKENDS[int(rng.integers(2))]
+        host = encode_codes(codes, backend, chunk_size=cs, use_pallas=False)
+        dev = encode_codes(codes, backend, chunk_size=cs, use_pallas=True)
+        assert dev == host, f"n={n} alpha={alpha} cs={cs} {backend}"
+        np.testing.assert_array_equal(
+            decode_codes(dev, codes.shape, use_pallas=True), codes)

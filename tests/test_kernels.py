@@ -156,6 +156,64 @@ def test_symbol_hist_feeds_huffman_fit():
     np.testing.assert_array_equal(codec.lengths, ref_codec.lengths)
 
 
+def _huffman_kernel_inputs(cs=64, size=4096, seed=77):
+    """Codec + padded [C, cs] lens/codes arrays shaped for the encode op."""
+    from repro.sz.entropy import HuffmanCodec
+
+    rng = np.random.default_rng(seed)
+    codes = rng.choice([0] * 10 + list(range(-30, 30)), size=size).astype(np.int32)
+    codec = HuffmanCodec.fit(codes)
+    inv = np.searchsorted(codec.alphabet, codes)
+    C = -(-codes.size // cs)
+    pad = C * cs - codes.size
+    lens = np.pad(codec.lengths[inv].astype(np.int32), (0, pad)).reshape(C, cs)
+    cws = np.pad(codec.codes[inv].astype(np.uint32).view(np.int32),
+                 (0, pad)).reshape(C, cs)
+    return codec, codes, lens, cws
+
+
+@pytest.mark.parametrize("cs", [8, 64, 256])
+def test_huffman_encode_matches_ref(cs):
+    _codec, _codes, lens, cws = _huffman_kernel_inputs(cs=cs, size=4 * cs + 3)
+    w_a, b_a = ops.huffman_encode_op(jnp.asarray(lens), jnp.asarray(cws),
+                                     use_pallas=True, interpret=True)
+    w_b, b_b = ref.huffman_encode_ref(jnp.asarray(lens), jnp.asarray(cws))
+    np.testing.assert_array_equal(np.asarray(w_a), np.asarray(w_b))
+    np.testing.assert_array_equal(np.asarray(b_a), np.asarray(b_b))
+    # each chunk's bit total is the sum of its member code lengths
+    np.testing.assert_array_equal(np.asarray(b_a), lens.sum(axis=1))
+
+
+def test_huffman_decode_matches_ref():
+    """Pallas decode probe == the pure-jnp block oracle == the source codes,
+    through the real codec tables and a real packed stream."""
+    cs = 64
+    codec, codes, lens, cws = _huffman_kernel_inputs(cs=cs)
+    stream, chunk_bits, _total = codec._device_pack(codes, cs, interpret=True)
+    dev = codec._device_tables()
+    raw = np.frombuffer(stream, np.uint8)
+    padded = np.zeros(raw.size + (-raw.size) % 4 + 8, np.uint8)
+    padded[: raw.size] = raw
+    words = padded.view(">u4").astype(np.uint32).view(np.int32)
+    ends = np.cumsum(chunk_bits)
+    offsets = (ends - chunk_bits).astype(np.int32)
+    C = chunk_bits.size
+    counts = np.full(C, cs, np.int32)
+    counts[-1] = codes.size - cs * (C - 1)
+    tables = [jnp.asarray(dev[key]) for key in
+              ("lut_count", "lut_bits", "lut_ids", "cw_map", "order",
+               "len_sorted")]
+    ids_a = ops.huffman_decode_op(
+        jnp.asarray(words), jnp.asarray(offsets), jnp.asarray(counts),
+        *tables, chunk_size=cs, k=dev["k"], use_pallas=True, interpret=True)
+    ids_b = ref.huffman_decode_ref(
+        jnp.asarray(words), jnp.asarray(offsets), jnp.asarray(counts),
+        *tables, chunk_size=cs, k=dev["k"])
+    np.testing.assert_array_equal(np.asarray(ids_a), np.asarray(ids_b))
+    flat = np.asarray(ids_a).reshape(-1)[: codes.size]
+    np.testing.assert_array_equal(codec.alphabet[flat], codes)
+
+
 def test_group_hist_matches_grouping_module():
     """Kernel ids must agree with repro.core.grouping (the pipeline contract)."""
     from repro.core import grouping

@@ -357,6 +357,66 @@ def test_daemon_concurrent_http_bit_equal(tmp_path, tiled_vol, field, full):
 
 
 # ---------------------------------------------------------------------------
+# ETag revalidation: 304 without decode (ISSUE 8 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_pool_region_etag_canonical(tmp_path, tiled_vol):
+    """ETags hash the CANONICAL ROI: equivalent spellings revalidate each
+    other, different regions never collide, and the tag is a strong quoted
+    token stable across calls."""
+    pool = VolumePool({"nyx": _gwtc_path(tmp_path, tiled_vol)},
+                      cache_bytes=1 << 20, mem_budget=8 << 20)
+    with pool:
+        e1, _ = pool.region_etag("nyx", "0:8,0:8,0:8")
+        e2, _ = pool.region_etag("nyx", ":8,:8,:8")
+        e3, _ = pool.region_etag("nyx", "0:8,0:8,0:8")
+        assert e1 == e2 == e3
+        assert e1.startswith('"') and e1.endswith('"')
+        e4, _ = pool.region_etag("nyx", "8:16,0:8,0:8")
+        assert e4 != e1
+        with pytest.raises(KeyError):
+            pool.region_etag("nope", "0:4")
+
+
+def test_daemon_etag_304_skips_decode(tmp_path, tiled_vol, full):
+    """Revalidating with the returned ETag answers 304 with an empty body:
+    no decode work runs (tiles_decoded frozen, no latency sample), yet the
+    request and the not_modified counter both advance."""
+    pool = VolumePool({"nyx": _gwtc_path(tmp_path, tiled_vol)},
+                      cache_bytes=8 << 20, mem_budget=8 << 20)
+    with RegionServer(pool) as srv:
+        arr1, meta1 = fetch_region(srv.url, "nyx", "0:8,8:16,0:8")
+        np.testing.assert_array_equal(arr1, full[0:8, 8:16, 0:8])
+        assert meta1["etag"]
+        m1 = fetch_json(srv.url, "/metrics")
+
+        # exact and canonical-equivalent ROI spellings both revalidate
+        arr2, meta2 = fetch_region(srv.url, "nyx", "0:8,8:16,0:8",
+                                   etag=meta1["etag"])
+        assert arr2 is None and meta2["etag"] == meta1["etag"]
+        arr3, _ = fetch_region(srv.url, "nyx", ":8,8:16,:8",
+                               etag=meta1["etag"])
+        assert arr3 is None
+
+        m2 = fetch_json(srv.url, "/metrics")
+        assert m2["not_modified"] == 2
+        assert m2["requests"] == m1["requests"] + 2
+        assert m2["volumes"]["nyx"]["tiles_decoded"] \
+            == m1["volumes"]["nyx"]["tiles_decoded"], "304 must not decode"
+        assert m2["latency_ms"]["count"] == m1["latency_ms"]["count"], \
+            "304s take no latency sample"
+
+        # a stale tag for a DIFFERENT region is a miss: full 200 + new tag
+        arr4, meta4 = fetch_region(srv.url, "nyx", "8:16,8:16,0:8",
+                                   etag=meta1["etag"])
+        np.testing.assert_array_equal(arr4, full[8:16, 8:16, 0:8])
+        assert meta4["etag"] != meta1["etag"]
+        m3 = fetch_json(srv.url, "/metrics")
+        assert m3["not_modified"] == 2 and m3["errors"] == 0
+
+
+# ---------------------------------------------------------------------------
 # CLI: normalized exit codes (0 ok / 1 integrity / 2 usage) + serve
 # ---------------------------------------------------------------------------
 
