@@ -274,6 +274,23 @@ def _tile_enhance_bench() -> None:
          f"tiles={art.n_tiles}")
 
 
+def _lint_gate_bench() -> None:
+    """The RA001–RA005 static-analysis gate (docs/ANALYSIS.md) runs on
+    every CI push; this row guards that a full-tree lint stays interactive
+    — one shared parse + walk per file must keep it in the single-digit
+    seconds, or the gate starts costing more than it saves."""
+    from repro.analysis import run_analysis
+    from repro.analysis.engine import default_root
+
+    findings, us = timed(run_analysis, repeats=1)
+    assert not findings, "lint gate must be clean on the benchmarked tree"
+    assert us < 10e6, f"full-tree lint took {us / 1e6:.1f}s (budget: a few seconds)"
+    files = sum(1 for p in default_root().rglob("*.py")
+                if "__pycache__" not in p.parts)
+    emit("throughput/analysis/lint_full_tree", us,
+         f"files={files};findings=0;files_per_s={files / (us / 1e6):.0f}")
+
+
 def main() -> None:
     x = jnp.asarray(nyx_like_field(VOLUME, "temperature", seed=1))
     nbytes = x.size * 4
@@ -302,6 +319,7 @@ def main() -> None:
     _verify_overhead_bench()
     _cached_region_bench()
     _tile_enhance_bench()
+    _lint_gate_bench()
 
     # kernels (interpret mode on CPU: correctness-path timing only)
     _, us = timed(lambda: ops.lorenzo_quant_op(x, 1.0, use_pallas=False).block_until_ready(), repeats=3)

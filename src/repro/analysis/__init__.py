@@ -1,0 +1,41 @@
+"""Project-specific static analysis (docs/ANALYSIS.md).
+
+An AST-based checker suite wired in as a tier-1 CI gate: one shared parse
++ walk per file (``engine``), five rules encoding the invariants the rest
+of the stack only enforces by convention —
+
+* **RA001 lock-discipline** (``locks``): attributes registered as
+  lock-guarded are only mutated under ``with self.<lock>:``.
+* **RA002 tracer-safety** (``tracer``): no host numpy / prints / Python
+  data-dependent branching inside jit/vmap/pallas-traced functions.
+* **RA003 kernel-triple-parity** (``parity``): every Pallas kernel has a
+  ``ref.py`` oracle, a ``use_pallas=None`` dispatch in ``ops.py``, and a
+  kernel-vs-ref test.
+* **RA004 exception-hygiene** (``hygiene``): no swallowed broad excepts;
+  integrity paths raise the ``repro.errors`` hierarchy.
+* **RA005 container-tag-drift** (``tags``): container magic/version
+  constants resolve to the one shared registry in ``sz/artifact.py``.
+
+Shell surface: ``python -m repro.cli lint [--json] [--rule RAnnn ...]
+[--baseline PATH] [--write-baseline]`` — exit 0 clean, 1 findings, 2
+usage, matching the CLI-wide exit-code contract.
+"""
+from repro.analysis.engine import (
+    ModuleInfo,
+    ProjectContext,
+    Rule,
+    all_rules,
+    analyze_source,
+    run_analysis,
+)
+from repro.analysis.findings import Finding
+
+__all__ = [
+    "Finding",
+    "ModuleInfo",
+    "ProjectContext",
+    "Rule",
+    "all_rules",
+    "analyze_source",
+    "run_analysis",
+]

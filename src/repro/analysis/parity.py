@@ -1,0 +1,152 @@
+"""RA003 — kernel-triple parity: every Pallas kernel ships with its oracle.
+
+The accelerator layer is built as triples (docs/ARCHITECTURE.md): a Pallas
+kernel module under ``kernels/``, a pure-jnp oracle in ``kernels/ref.py``
+that defines the kernel's semantics, and a dispatch wrapper in
+``kernels/ops.py`` that picks between them with the stack's
+``use_pallas=None`` auto-detect rule.  A kernel whose oracle or dispatch is
+missing can drift silently — its device bytes stop being checkable against
+anything.  This project rule asserts, across files:
+
+* every kernel module (a ``kernels/*.py`` that calls ``pallas_call``,
+  other than ``ops``/``ref``) has at least one public function imported by
+  ``kernels/ops.py``;
+* every ``*_op`` dispatch in ``ops.py`` that reaches a kernel function
+  also calls a ``ref.*`` oracle that actually exists in ``ref.py``, and
+  exposes a ``use_pallas`` keyword defaulting to ``None`` (the auto-detect
+  contract);
+* every such dispatch name appears somewhere in ``tests/*.py`` — each op
+  must be exercised by a kernel-vs-ref test.
+
+Pure-jnp ops (no Pallas branch, e.g. ``lorenzo_decode_tiles_op``) are
+exempt from the oracle/auto-detect checks: there is no kernel to compare.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import ModuleInfo, ProjectContext, Rule
+
+_EXCLUDED = ("kernels/__init__.py", "kernels/ops.py", "kernels/ref.py")
+
+
+def _calls_pallas(mod: ModuleInfo) -> bool:
+    for call in mod.calls:
+        f = call.func
+        if isinstance(f, ast.Attribute) and f.attr == "pallas_call":
+            return True
+        if isinstance(f, ast.Name) and f.id == "pallas_call":
+            return True
+    return False
+
+
+def _top_level_defs(mod: ModuleInfo) -> list:
+    return [s for s in mod.tree.body
+            if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef))]
+
+
+class KernelParity(Rule):
+    id = "RA003"
+    name = "kernel-triple-parity"
+    severity = "error"
+
+    def check_project(self, mods: list[ModuleInfo], ctx: ProjectContext):
+        by_rel = {m.rel: m for m in mods}
+        kernel_mods = [m for m in mods
+                       if m.rel.startswith("kernels/") and m.rel not in _EXCLUDED
+                       and _calls_pallas(m)]
+        if not kernel_mods:
+            return
+        ops = by_rel.get("kernels/ops.py")
+        ref = by_rel.get("kernels/ref.py")
+        if ops is None:
+            for m in kernel_mods:
+                yield self.finding(
+                    m, 1, f"Pallas kernel module {m.rel} has no kernels/ops.py "
+                          "dispatch layer (kernel/ref/op triple is incomplete)")
+            return
+        ref_defs = {fn.name for fn in _top_level_defs(ref)} if ref else set()
+        kernel_imports = self._kernel_imports(ops)
+
+        # 1) every kernel module is reachable through the dispatch layer
+        imported = set(kernel_imports)
+        for m in kernel_mods:
+            base = m.rel.rsplit("/", 1)[-1][:-3]
+            public = {fn.name for fn in _top_level_defs(m)
+                      if not fn.name.startswith("_")}
+            if not public & imported:
+                yield self.finding(
+                    m, 1, f"no public function of kernel module {m.rel} is "
+                          "imported by kernels/ops.py — the kernel is not "
+                          f"dispatchable (exports: {sorted(public) or base})")
+
+        # 2) every dispatch that reaches a kernel also reaches its oracle,
+        #    honors use_pallas=None, and is covered by a test
+        tests_text = ctx.tests_text()
+        for fn in _top_level_defs(ops):
+            if not fn.name.endswith("_op"):
+                continue
+            used = {n for n in self._names_used(fn)}
+            kernel_used = used & imported
+            if not kernel_used:
+                continue  # pure-jnp op: no kernel branch to check
+            ref_used = self._ref_attrs(fn)
+            if not ref_used:
+                yield self.finding(
+                    ops, fn.lineno,
+                    f"{fn.name} dispatches kernel(s) {sorted(kernel_used)} "
+                    "but never calls a ref.* oracle — device output is "
+                    "uncheckable against a reference")
+            missing = sorted(ref_used - ref_defs)
+            if missing:
+                yield self.finding(
+                    ops, fn.lineno,
+                    f"{fn.name} calls ref.{missing[0]} but kernels/ref.py "
+                    f"does not define it (missing oracles: {missing})")
+            if not self._use_pallas_defaults_none(fn):
+                yield self.finding(
+                    ops, fn.lineno,
+                    f"{fn.name} must take use_pallas: bool | None = None "
+                    "(the auto-detect dispatch contract)")
+            if tests_text and fn.name not in tests_text:
+                yield self.finding(
+                    ops, fn.lineno,
+                    f"{fn.name} appears in no test under {ctx.tests_dir} — "
+                    "every dispatch op needs a kernel-vs-ref parity test")
+            elif not tests_text:
+                yield self.finding(
+                    ops, fn.lineno,
+                    f"no tests directory found to cover {fn.name} "
+                    "(kernel-vs-ref parity tests are required)")
+
+    @staticmethod
+    def _kernel_imports(ops: ModuleInfo) -> dict[str, str]:
+        """name -> source module for ``from repro.kernels.X import a, b``."""
+        out: dict[str, str] = {}
+        for node in ast.walk(ops.tree):
+            if isinstance(node, ast.ImportFrom) and node.module \
+                    and ".kernels." in f".{node.module}." \
+                    and not node.module.endswith((".ref", ".ops")):
+                for alias in node.names:
+                    out[alias.asname or alias.name] = node.module
+        return out
+
+    @staticmethod
+    def _names_used(fn) -> set[str]:
+        return {n.id for n in ast.walk(fn) if isinstance(n, ast.Name)}
+
+    @staticmethod
+    def _ref_attrs(fn) -> set[str]:
+        return {n.attr for n in ast.walk(fn)
+                if isinstance(n, ast.Attribute)
+                and isinstance(n.value, ast.Name) and n.value.id == "ref"}
+
+    @staticmethod
+    def _use_pallas_defaults_none(fn) -> bool:
+        a = fn.args
+        pairs = list(zip(a.args[len(a.args) - len(a.defaults):], a.defaults)) \
+            + [(p, d) for p, d in zip(a.kwonlyargs, a.kw_defaults) if d is not None]
+        for param, default in pairs:
+            if param.arg == "use_pallas":
+                return isinstance(default, ast.Constant) and default.value is None
+        return False

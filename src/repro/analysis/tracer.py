@@ -1,0 +1,215 @@
+"""RA002 — tracer safety inside jit/vmap/lax.map/shard_map/pallas functions.
+
+A function handed to the JAX tracer runs ONCE at trace time with abstract
+values; host-side work inside it either crashes (`TracerBoolConversionError`
+on a Python branch over a traced value), silently constant-folds (a host
+``np.*`` call on a tracer), or fires at trace time instead of run time
+(``print``, mutation of enclosing state).  This rule finds functions that
+enter the tracer —
+
+* defs decorated ``@jax.jit`` / ``@partial(jax.jit, ...)``,
+* functions (named or lambda) passed to ``jax.jit``, ``jax.vmap``,
+  ``jax.lax.map``, ``shard_map``, or ``pl.pallas_call``
+
+— and inside them flags:
+
+* ``print(...)`` / ``breakpoint()`` calls (trace-time side effects);
+* ``global`` / ``nonlocal`` declarations (mutation of enclosing state from
+  inside a traced function);
+* host ``np.*`` / ``numpy.*`` calls taking a traced parameter directly
+  (``jnp`` is the traced-world spelling);
+* ``if`` / ``while`` tests using a traced parameter as a bare name —
+  Python-level data-dependent control flow.  Attribute reads like
+  ``x.ndim``/``x.shape`` are static and stay allowed, and parameters named
+  in the jit's ``static_argnames``/``static_argnums`` are excluded, so
+  config-style branching on static arguments does not fire.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import ModuleInfo, Rule
+
+# call targets (dotted-name suffixes) whose first function argument is traced
+_WRAPPERS_ARG0 = ("jax.jit", "jax.vmap", "jax.lax.map", "lax.map",
+                  "shard_map", "pallas_call", "pl.pallas_call")
+_HOST_MODULES = ("np", "numpy")
+_SIDE_EFFECT_CALLS = ("print", "breakpoint")
+
+
+def _dotted(node: ast.AST) -> str | None:
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _const_str_items(node: ast.AST | None) -> list:
+    if isinstance(node, ast.Constant):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [e.value for e in node.elts if isinstance(e, ast.Constant)]
+    return []
+
+
+def _param_names(fn) -> list[str]:
+    a = fn.args
+    names = [p.arg for p in (a.posonlyargs + a.args + a.kwonlyargs)]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+class TracerSafety(Rule):
+    id = "RA002"
+    name = "tracer-safety"
+    severity = "error"
+
+    def check_module(self, mod: ModuleInfo):
+        seen: set[ast.AST] = set()
+        for fn, static in self._traced_functions(mod):
+            if fn in seen:
+                continue
+            seen.add(fn)
+            traced = set(_param_names(fn)) - static
+            yield from self._check_traced(fn, traced, mod)
+
+    # -- which functions enter the tracer ------------------------------------
+
+    def _traced_functions(self, mod: ModuleInfo):
+        by_name = {}
+        for fn in mod.functions:
+            by_name.setdefault(fn.name, fn)
+        # decorated defs
+        for fn in mod.functions:
+            for dec in fn.decorator_list:
+                static = self._jit_static(dec, fn)
+                if static is not None:
+                    yield fn, static
+        # functions passed by value to tracing wrappers
+        for call in mod.calls:
+            name = _dotted(call.func)
+            if name is None or not name.endswith(_WRAPPERS_ARG0):
+                continue
+            if not call.args:
+                continue
+            target = call.args[0]
+            if isinstance(target, ast.Lambda):
+                yield target, set()
+            elif isinstance(target, ast.Name) and target.id in by_name:
+                yield by_name[target.id], set()
+
+    def _jit_static(self, dec: ast.AST, fn) -> set[str] | None:
+        """Static parameter names when ``dec`` marks ``fn`` as jitted,
+        else None (not a jit decorator)."""
+        name = _dotted(dec)
+        if name in ("jit", "jax.jit"):
+            return set()
+        if not isinstance(dec, ast.Call):
+            return None
+        cname = _dotted(dec.func)
+        inner = None
+        if cname in ("jit", "jax.jit"):
+            inner = dec
+        elif cname in ("partial", "functools.partial") and dec.args \
+                and _dotted(dec.args[0]) in ("jit", "jax.jit"):
+            inner = dec
+        if inner is None:
+            return None
+        static: set[str] = set()
+        params = _param_names(fn)
+        for kw in inner.keywords:
+            if kw.arg == "static_argnames":
+                static.update(s for s in _const_str_items(kw.value)
+                              if isinstance(s, str))
+            elif kw.arg == "static_argnums":
+                for i in _const_str_items(kw.value):
+                    if isinstance(i, int) and 0 <= i < len(params):
+                        static.add(params[i])
+        return static
+
+    # -- what must not happen inside one -------------------------------------
+
+    def _check_traced(self, fn, traced: set[str], mod: ModuleInfo):
+        where = getattr(fn, "name", "<lambda>")
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                cname = _dotted(node.func)
+                if cname in _SIDE_EFFECT_CALLS:
+                    yield self.finding(
+                        mod, node.lineno,
+                        f"host side effect {cname}() inside traced function "
+                        f"{where} (runs at trace time, not per step)")
+                elif cname is not None and "." in cname \
+                        and cname.split(".", 1)[0] in _HOST_MODULES:
+                    hit = self._traced_arg(node, traced)
+                    if hit is not None:
+                        yield self.finding(
+                            mod, node.lineno,
+                            f"host numpy call {cname}() on traced value "
+                            f"'{hit}' inside {where} (use jnp, or hoist to "
+                            "the host stage)")
+            elif isinstance(node, (ast.Global, ast.Nonlocal)):
+                kind = "global" if isinstance(node, ast.Global) else "nonlocal"
+                yield self.finding(
+                    mod, node.lineno,
+                    f"{kind} mutation inside traced function {where} "
+                    "(side effects fire at trace time)")
+            elif isinstance(node, (ast.If, ast.While)):
+                hit = self._traced_name_in_test(node.test, traced)
+                if hit is not None:
+                    yield self.finding(
+                        mod, node.lineno,
+                        f"Python-level branch on traced value '{hit}' inside "
+                        f"{where} (data-dependent control flow needs "
+                        "lax.cond/lax.select, or mark the argument static)")
+
+    @staticmethod
+    def _traced_arg(call: ast.Call, traced: set[str]) -> str | None:
+        for arg in list(call.args) + [kw.value for kw in call.keywords]:
+            if isinstance(arg, ast.Starred):
+                arg = arg.value
+            if isinstance(arg, ast.Name) and arg.id in traced:
+                return arg.id
+        return None
+
+    def _traced_name_in_test(self, test: ast.AST, traced: set[str]) -> str | None:
+        """A traced parameter used as a BARE name in a branch test.
+
+        Names under an Attribute (``x.ndim``) or a call result are skipped —
+        shape/dtype/ndim reads are static facts about a tracer.  Identity
+        tests against ``None`` (``if rng is None:``) are also skipped: a
+        tracer is never ``None``, the comparison is a static Python fact
+        and no boolean conversion of the tracer happens."""
+        parents: dict[ast.AST, ast.AST] = {}
+        stack = [test]
+        while stack:
+            node = stack.pop()
+            for child in ast.iter_child_nodes(node):
+                parents[child] = node
+                stack.append(child)
+            if isinstance(node, ast.Name) and node.id in traced:
+                p = parents.get(node)
+                if isinstance(p, ast.Attribute) and p.value is node:
+                    continue
+                if isinstance(p, ast.Call):
+                    continue  # f(x) in a test: the call decides staticness
+                if isinstance(p, ast.Compare) and self._is_none_identity(p):
+                    continue
+                return node.id
+        return None
+
+    @staticmethod
+    def _is_none_identity(cmp: ast.Compare) -> bool:
+        """True for ``x is None`` / ``x is not None`` shaped comparisons."""
+        if not all(isinstance(op, (ast.Is, ast.IsNot)) for op in cmp.ops):
+            return False
+        operands = [cmp.left] + list(cmp.comparators)
+        return any(isinstance(o, ast.Constant) and o.value is None
+                   for o in operands)

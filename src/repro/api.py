@@ -95,8 +95,8 @@ def _apply_verify(artifact, verify: str, on_corrupt: str, fill_value: float):
 
 _builtin_open = open  # shadowed below by the façade's open()
 
-GWDS_MAGIC = b"GWDS"
-_GWDS_VERSION = 2
+GWDS_MAGIC = A.GWDS_MAGIC
+_GWDS_VERSION = A.GWDS_VERSION
 # v1/v2 header: magic, version, pad x3, count (v1: n_fields; v2: reserved —
 # the field count of a streamed envelope lands in the footer)
 _GWDS_HDR = struct.Struct("<4sB3xI")
@@ -139,12 +139,12 @@ class DecodeStats:
 
     def __init__(self, tiles_total: int, train: GWLZStats | None = None):
         self._lock = threading.Lock()
-        self.tiles_decoded = 0
+        self.tiles_decoded = 0  # guarded-by: _lock
         self.tiles_total = tiles_total
-        self.cache_hits = 0
+        self.cache_hits = 0  # guarded-by: _lock
         # lanes whose CRC check failed under on_corrupt="quarantine" — these
         # decode as the fill value instead of raising (docs/ROBUSTNESS.md)
-        self.quarantined = 0
+        self.quarantined = 0  # guarded-by: _lock
         self._train = train
 
     def record(self, *, decoded: int = 0, hits: int = 0) -> None:
@@ -821,7 +821,7 @@ def open(path: str | os.PathLike, *, pipeline: GWLZ | None = None,
                          tile_cache=tile_cache, cache_ns=cache_ns,
                          verify=verify, on_corrupt=on_corrupt,
                          fill_value=fill_value)
-    except Exception:
+    except BaseException:
         mv.release()
         mm.close()
         f.close()

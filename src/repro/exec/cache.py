@@ -61,12 +61,12 @@ class TileCache:
     def __init__(self, capacity_bytes: int):
         self.capacity = int(capacity_bytes)
         self._lock = threading.Lock()
-        self._d: OrderedDict[object, np.ndarray] = OrderedDict()
-        self._nbytes = 0
-        self._inflight: dict[object, _Flight] = {}
-        self._hits = 0
-        self._misses = 0
-        self._coalesced = 0
+        self._d: OrderedDict[object, np.ndarray] = OrderedDict()  # guarded-by: _lock
+        self._nbytes = 0  # guarded-by: _lock
+        self._inflight: dict[object, _Flight] = {}  # guarded-by: _lock
+        self._hits = 0  # guarded-by: _lock
+        self._misses = 0  # guarded-by: _lock
+        self._coalesced = 0  # guarded-by: _lock
 
     @property
     def nbytes(self) -> int:

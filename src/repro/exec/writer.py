@@ -31,16 +31,17 @@ import zlib
 import numpy as np
 
 from repro.errors import CorruptContainerError
+from repro.sz import artifact as A
 from repro.sz import tiled as T
 
-_GWDS_MAGIC = b"GWDS"
-_GWDS_VERSION = 2
+_GWDS_MAGIC = A.GWDS_MAGIC
+_GWDS_VERSION = A.GWDS_VERSION
 # v2 header: magic, version, pad x3, reserved u32 (field count lives in the
 # footer — it is not known when a streaming writer starts)
 _GWDS_HDR = struct.Struct("<4sB3xI")
 # v2 footer: index offset, field count, sentinel
 _GWDS_FOOTER = struct.Struct("<QI4s")
-_GWDS_SENTINEL = b"GWDX"
+_GWDS_SENTINEL = A.GWDS_SENTINEL
 
 # --- commit journal (sidecar <path>.journal) --------------------------------
 # header:  magic 'GWJL', version, pad, prefix_len u32, prefix bytes, crc u32
@@ -49,8 +50,8 @@ _GWDS_SENTINEL = b"GWDX"
 # blocks:  n_new u32 | n_new x (lane_len u64, lane_crc u32) | committed u64
 #          | block crc u32 — one block per commit(); a torn tail block (crash
 #          mid-append) fails its CRC and is ignored, the previous block wins.
-_JOURNAL_MAGIC = b"GWJL"
-_JOURNAL_VERSION = 1
+_JOURNAL_MAGIC = A.JOURNAL_MAGIC
+_JOURNAL_VERSION = A.JOURNAL_VERSION
 _JOURNAL_HDR = struct.Struct("<4sB3xI")
 _LANE_ENTRY = struct.Struct("<QI")
 

@@ -51,7 +51,8 @@ def logical_shard(x: jax.Array, rules: ShardingRules, *logical: Optional[str]) -
         return x
     try:
         return jax.lax.with_sharding_constraint(x, jax.NamedSharding(jax.sharding.get_mesh(), rules.spec(*logical)))
-    except Exception:
+    except (ValueError, TypeError, RuntimeError):
+        # no concrete mesh / spec rank mismatch: constraint is best-effort
         return x
 
 
@@ -59,7 +60,8 @@ def shard_constraint(x: jax.Array, spec: P) -> jax.Array:
     """Constraint against the ambient mesh (jit in-context mesh)."""
     try:
         return jax.lax.with_sharding_constraint(x, spec)
-    except Exception:
+    except (ValueError, TypeError, RuntimeError):
+        # outside jit or mesh-less context: constraint is best-effort
         return x
 
 

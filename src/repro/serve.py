@@ -83,10 +83,10 @@ class AdmissionController:
         self.max_queue = int(max_queue)
         self.timeout = float(timeout)
         self._cv = threading.Condition()
-        self.inflight_bytes = 0
-        self.queue_depth = 0
-        self.peak_queue_depth = 0
-        self.rejected = 0
+        self.inflight_bytes = 0  # guarded-by: _cv
+        self.queue_depth = 0  # guarded-by: _cv
+        self.peak_queue_depth = 0  # guarded-by: _cv
+        self.rejected = 0  # guarded-by: _cv
 
     def admit(self, cost: int) -> None:
         cost = max(0, int(cost))
@@ -131,12 +131,12 @@ class _Metrics:
     def __init__(self):
         self._lock = threading.Lock()
         self.started = time.monotonic()
-        self.requests = 0
-        self.errors = 0
-        self.not_modified = 0
-        self.lanes_served = 0
-        self.per_volume: dict[str, int] = {}
-        self._latency_ms: deque[float] = deque(maxlen=_LATENCY_WINDOW)
+        self.requests = 0  # guarded-by: _lock
+        self.errors = 0  # guarded-by: _lock
+        self.not_modified = 0  # guarded-by: _lock
+        self.lanes_served = 0  # guarded-by: _lock
+        self.per_volume: dict[str, int] = {}  # guarded-by: _lock
+        self._latency_ms: deque[float] = deque(maxlen=_LATENCY_WINDOW)  # guarded-by: _lock
 
     def record(self, name: str, latency_ms: float, lanes: int) -> None:
         with self._lock:
@@ -195,9 +195,9 @@ class VolumePool:
         self.metrics = _Metrics()
         self._open_kw = dict(verify=verify, on_corrupt=on_corrupt,
                              fill_value=fill_value)
-        self._volumes: dict[str, api.CompressedVolume] = {}
-        self._owned: set[str] = set()
-        self._etag_seeds: dict[str, str] = {}
+        self._volumes: dict[str, api.CompressedVolume] = {}  # guarded-by: _lock
+        self._owned: set[str] = set()  # guarded-by: _lock
+        self._etag_seeds: dict[str, str] = {}  # guarded-by: _lock
         self._lock = threading.Lock()
         for name, spec in dict(volumes or {}).items():
             self.add_volume(name, spec)

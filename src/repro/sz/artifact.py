@@ -18,11 +18,53 @@ consumers never switch on concrete artifact types:
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Protocol, runtime_checkable
 
 from repro.errors import CorruptContainerError
 
 MAGIC_LEN = 4
+
+
+# ---------------------------------------------------------------------------
+# Wire-tag registry — THE single home of container magic/version constants.
+#
+# Every magic byte string and format version number in the stack is defined
+# here and imported (or aliased) by its consumers: the GWTC/SZJX parsers,
+# the GWDS envelope (api.py + exec/writer.py), the commit journal, and the
+# entropy blob header.  GWTC went v1->v3 and GWDS v1->v2 with the literals
+# scattered per parser; centralizing them makes a format bump one edit and
+# lets the RA005 static-analysis rule (repro.analysis.tags) reject any
+# duplicated literal that could drift (docs/ANALYSIS.md).
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ContainerTag:
+    """One container family's wire identity: its 4-byte magic, the current
+    format version (None for unversioned headers), and the trailing footer
+    sentinel when the layout has one."""
+
+    name: str
+    magic: bytes
+    version: int | None = None
+    sentinel: bytes | None = None
+
+
+GWTC_MAGIC, GWTC_VERSION = b"GWTC", 3  # tiled container (docs/TILED_FORMAT.md)
+SZJX_MAGIC = b"SZJX"                   # monolithic artifact (unversioned header)
+GWDS_MAGIC, GWDS_VERSION = b"GWDS", 2  # multi-field dataset (docs/DATASET_FORMAT.md)
+GWDS_SENTINEL = b"GWDX"                # GWDS v2 footer sentinel
+JOURNAL_MAGIC, JOURNAL_VERSION = b"GWJL", 1  # commit journal (docs/ROBUSTNESS.md)
+ENTROPY_MAGIC = b"RPRE"                # entropy lane blob (docs/ENTROPY_FORMAT.md)
+
+CONTAINER_TAGS: dict[str, ContainerTag] = {
+    "GWTC": ContainerTag("GWTC", GWTC_MAGIC, GWTC_VERSION),
+    "SZJX": ContainerTag("SZJX", SZJX_MAGIC),
+    "GWDS": ContainerTag("GWDS", GWDS_MAGIC, GWDS_VERSION, GWDS_SENTINEL),
+    "GWJL": ContainerTag("GWJL", JOURNAL_MAGIC, JOURNAL_VERSION),
+    "RPRE": ContainerTag("RPRE", ENTROPY_MAGIC),
+}
 
 
 @runtime_checkable

@@ -28,7 +28,9 @@ from typing import NamedTuple
 
 import numpy as np
 
-_MAGIC = b"RPRE"
+from repro.sz.artifact import ENTROPY_MAGIC
+
+_MAGIC = ENTROPY_MAGIC
 
 DEFAULT_CHUNK = 256  # symbols per independently decodable chunk
 _LUT_BITS = 12  # primary decode-table width cap (2**k uint64 entries)

@@ -22,7 +22,7 @@ from repro.sz.entropy import decode_codes, encode_codes
 from repro.sz.quantizer import resolve_eb
 
 _HDR = struct.Struct("<4sBBBBQ")  # magic, ndim, predictor, order, levels, eb bits as u64
-_MAGIC = b"SZJX"
+_MAGIC = A.SZJX_MAGIC
 # Wire ids are shared with the GWTC container (canonical registry ids).
 _PRED = P.PRED_IDS
 _PRED_INV = P.PRED_NAMES

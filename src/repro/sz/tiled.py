@@ -41,8 +41,8 @@ from repro.sz import artifact as A
 from repro.sz.predictor import ORDER_IDS, ORDER_NAMES, PRED_IDS, PRED_NAMES, get_predictor
 from repro.sz.quantizer import resolve_eb
 
-_MAGIC = b"GWTC"
-_VERSION = 3
+_MAGIC = A.GWTC_MAGIC
+_VERSION = A.GWTC_VERSION
 # v1: magic, version, ndim, backend, pad, eb bits, n_tiles
 _HDR_V1 = struct.Struct("<4sBBBBQQ")
 # v2 adds the predictor layer: magic, version, ndim, backend, predictor,
