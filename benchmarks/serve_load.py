@@ -14,7 +14,19 @@ three properties the tentpole promises (docs/SERVING.md):
   clear ``--min-hit-rate`` (overlapping ROIs + single-flight mean each
   lane entropy-decodes roughly once no matter how many clients want it),
 * **latency** — p99 region latency (client-observed, queueing included)
-  must stay under ``--p99-ms``.
+  must stay under ``--p99-ms``,
+* **compile stability** — after a warmup pass that touches every decode
+  bucket, the storm must trigger **zero** new decode programs
+  (``recompiles_after_warmup == 0``); bucketed padding bounds the set of
+  compiled executables, and this assertion is what keeps it bounded,
+* **dispatch reduction** — a serialized in-process phase hammers one
+  volume with ``--readers`` concurrent single-lane region reads, batcher
+  off then on, and asserts the cross-request micro-batcher cuts device
+  dispatches by at least 2x.
+
+``--batcher off`` disables the pool's cross-request decode batcher (CI
+runs both modes and uploads both reports); ``--max-wait-ms`` sets the
+batcher's coalescing window.
 
 Emits ``serve_load/...`` rows in the harness CSV schema and, with
 ``--json``, a machine-readable report CI uploads next to the throughput
@@ -32,10 +44,81 @@ import time
 import numpy as np
 
 
+def _warm_decode_buckets(handle) -> None:
+    """Compile every decode program the storm can reach: one decode per
+    power-of-two bucket width up to the cap (27 lanes under the cap also
+    touches the cap-width bucket via padding).  Goes through the pipeline
+    directly so the tile cache stays cold for the hit-rate assertion."""
+    from repro.sz import tiled
+
+    n_lanes = handle.artifact.n_tiles
+    b = 1
+    while b <= tiled.DEFAULT_BUCKET_CAP:
+        handle.pipeline.decode_tiles(handle.artifact,
+                                     list(range(min(b, n_lanes))))
+        if b >= n_lanes:
+            break
+        b *= 2
+
+
+def _dispatch_compare(args, artifact, full) -> dict:
+    """Serialized in-process phase: ``--readers`` threads each decode one
+    tile-aligned lane through a fresh shared-cache handle, batcher off then
+    on; the device-dispatch delta (process-global ``tiled`` counters) must
+    drop by >= 2x with the batcher coalescing cross-request work."""
+    import itertools
+
+    from repro import api
+    from repro.exec.cache import DecodeBatcher, TileCache
+    from repro.sz import tiled
+
+    t, shp = artifact.tile, artifact.shape
+    rois = [tuple(slice(a, min(a + t[d], shp[d])) for d, a in enumerate(pos))
+            for pos in itertools.product(
+                *[range(0, shp[d], t[d]) for d in range(len(shp))])]
+
+    out = {}
+    for mode in ("off", "on"):
+        batcher = None if mode == "off" else DecodeBatcher(
+            max_wait_ms=max(args.max_wait_ms, 20.0), max_batch_tiles=4096)
+        handle = api.CompressedVolume(
+            artifact, tile_cache=TileCache(args.cache_bytes),
+            cache_ns="cmp", decode_batcher=batcher)
+        bad: list[int] = []
+        lock = threading.Lock()
+        gate = threading.Barrier(args.readers)
+
+        def worker(i: int) -> None:
+            roi = rois[i % len(rois)]
+            gate.wait()
+            arr = handle[roi]
+            if not np.array_equal(arr, full[roi]):
+                with lock:
+                    bad.append(i)
+
+        before = tiled.dispatch_stats()["dispatches"]
+        threads = [threading.Thread(target=worker, args=(i,), daemon=True)
+                   for i in range(args.readers)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        out[mode] = {
+            "dispatches": tiled.dispatch_stats()["dispatches"] - before,
+            "mismatches": len(bad),
+        }
+        if batcher is not None:
+            out[mode]["batcher"] = batcher.info()
+    off, on = out["off"]["dispatches"], out["on"]["dispatches"]
+    out["reduction"] = off / on if on else float("inf")
+    return out
+
+
 def build_report(args) -> dict:
     from repro import api
     from repro.data import nyx_like_field
     from repro.serve import RegionServer, fetch_json, fetch_region
+    from repro.sz import tiled
 
     from benchmarks.common import emit
 
@@ -48,10 +131,17 @@ def build_report(args) -> dict:
 
     # the served handle shares the daemon pool's budgeted cache
     server = RegionServer(cache_bytes=args.cache_bytes,
-                          mem_budget=args.mem_budget)
+                          mem_budget=args.mem_budget,
+                          batch_wait_ms=(None if args.batcher == "off"
+                                         else args.max_wait_ms))
     shared = api.CompressedVolume(vol.artifact, tile_cache=server.pool.cache,
                                   cache_ns="nyx")
     server.pool.add_volume("nyx", shared)
+
+    # compile every reachable bucket program, then snapshot: the storm must
+    # not mint a single new one (zero warm-path recompiles, asserted below)
+    _warm_decode_buckets(shared)
+    warm_programs = tiled.dispatch_stats()["programs"]
 
     # shared ROI pool: overlapping windows so readers contend for the same
     # lanes — the regime the single-flight + shared-cache design targets
@@ -103,6 +193,9 @@ def build_report(args) -> dict:
         wall_s = time.perf_counter() - t0
         metrics = fetch_json(server.url, "/metrics")
 
+    recompiles = tiled.dispatch_stats()["programs"] - warm_programs
+    compare = _dispatch_compare(args, vol.artifact, full)
+
     lat = np.asarray(latencies, np.float64)
     total = args.readers * args.requests_per_reader
     p50, p90, p99 = (np.percentile(lat, [50, 90, 99]) if lat.size
@@ -120,11 +213,18 @@ def build_report(args) -> dict:
                        "mean": float(lat.mean()) if lat.size else float("nan")},
         "cache": cache,
         "admission": metrics["admission"],
+        "batcher_mode": args.batcher,
+        "batcher": metrics.get("batcher"),
+        "decode_programs": tiled.dispatch_stats(),
+        "recompiles_after_warmup": int(recompiles),
+        "dispatch_compare": compare,
         "volume": {"side": side, "tile": tile,
                    "n_lanes": vol.stats.tiles_total},
         "thresholds": {"p99_ms": args.p99_ms,
                        "min_hit_rate": args.min_hit_rate},
     }
+    report["decode_programs"]["batch_hist"] = {
+        str(k): v for k, v in report["decode_programs"]["batch_hist"].items()}
 
     emit("serve_load/region_p99", p99 * 1e3,
          f"p99_ms={p99:.1f} over {lat.size} requests from {args.readers} readers")
@@ -134,6 +234,13 @@ def build_report(args) -> dict:
          f"misses={cache['misses']} coalesced={cache['coalesced']}")
     emit("serve_load/throughput", 0.0, f"rps={report['rps']:.1f} "
          f"peak_queue={metrics['admission']['peak_queue_depth']}")
+    emit("serve_load/recompiles", 0.0,
+         f"recompiles_after_warmup={recompiles} "
+         f"programs={report['decode_programs']['programs']} "
+         f"batcher={args.batcher}")
+    emit("serve_load/dispatch_reduction", 0.0,
+         f"off={compare['off']['dispatches']} on={compare['on']['dispatches']} "
+         f"reduction={compare['reduction']:.1f}x readers={args.readers}")
 
     # -- asserted acceptance thresholds ------------------------------------
     errors = []
@@ -149,6 +256,16 @@ def build_report(args) -> dict:
     if not (cache["hit_rate"] > args.min_hit_rate):
         errors.append(f"hit rate {cache['hit_rate']:.3f} below "
                       f"{args.min_hit_rate} — the shared cache is not sharing")
+    if recompiles != 0:
+        errors.append(f"{recompiles} decode programs compiled AFTER warmup — "
+                      f"the bucket set is not bounding compilation")
+    if compare["off"]["mismatches"] or compare["on"]["mismatches"]:
+        errors.append("dispatch-compare phase served bytes != full[roi]")
+    if compare["on"]["dispatches"] * 2 > compare["off"]["dispatches"]:
+        errors.append(
+            f"batcher cut dispatches only {compare['reduction']:.2f}x "
+            f"({compare['off']['dispatches']} -> "
+            f"{compare['on']['dispatches']}); need >= 2x")
     report["passed"] = not errors
     report["errors"] = errors
     return report
@@ -173,6 +290,11 @@ def main(argv=None) -> int:
                          "client-observed, queueing included)")
     ap.add_argument("--min-hit-rate", type=float, default=0.5,
                     help="asserted shared-cache hit-rate floor")
+    ap.add_argument("--batcher", choices=("on", "off"), default="on",
+                    help="cross-request decode micro-batcher in the served "
+                         "pool (CI runs both and uploads both reports)")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="batcher coalescing window (pool batch_wait_ms)")
     ap.add_argument("--json", default=None, metavar="PATH")
     args = ap.parse_args(argv)
     if args.readers is None:
@@ -202,7 +324,9 @@ def main(argv=None) -> int:
         print(f"serve_load ok: {report['completed']} requests, "
               f"p99 {report['latency_ms']['p99']:.1f} ms, "
               f"hit_rate {report['cache']['hit_rate']:.3f}, "
-              f"{report['rps']:.1f} req/s")
+              f"{report['rps']:.1f} req/s, "
+              f"recompiles {report['recompiles_after_warmup']}, "
+              f"dispatch x{report['dispatch_compare']['reduction']:.1f}")
     return 0 if report["passed"] else 1
 
 

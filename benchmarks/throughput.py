@@ -274,6 +274,74 @@ def _tile_enhance_bench() -> None:
          f"tiles={art.n_tiles}")
 
 
+def _bucketed_decode_bench() -> None:
+    """Bucketed (compile-cached) lane decode vs the unbucketed path over
+    assorted ragged lane counts, bit-identity asserted.
+
+    Bucket padding rounds each batch up to a power-of-two width so every
+    decode reuses one of a bounded set of compiled programs; the info
+    column reports the compile-cache hit rate over the timed window
+    (1 - programs/dispatches) and the padded-tile overhead."""
+    from repro.sz import tiled
+
+    x = jnp.asarray(nyx_like_field(TILED_VOLUME, "temperature", seed=7))
+    vol = api.compress(x, eb=1e-3, tiled=True, tile=TILED_TILE,
+                       predictor="lorenzo")
+    art = vol.artifact
+    # ragged lane counts: full batch plus off-bucket subsets that need padding
+    counts = sorted({art.n_tiles, max(1, art.n_tiles - 1), 3,
+                     min(5, art.n_tiles)})
+
+    def run(cap):
+        return [np.asarray(tiled.decode_lanes(art, range(n),
+                                              bucket_cap=cap)[0])
+                for n in counts]
+
+    before = tiled.dispatch_stats()
+    bucketed, us_b = timed(lambda: run(None), repeats=3)
+    after = tiled.dispatch_stats()
+    plain, us_u = timed(lambda: run(0), repeats=3)
+    for a, b in zip(bucketed, plain):
+        assert np.array_equal(a, b), \
+            "bucketed decode must be bit-identical to the unbucketed path"
+    dispatches = after["dispatches"] - before["dispatches"]
+    programs = after["programs"] - before["programs"]
+    padded = after["padded_tiles"] - before["padded_tiles"]
+    hit = 1.0 - programs / max(dispatches, 1)
+    emit("throughput/tiled/decode_bucketed", us_b,
+         f"vs_unbucketed={us_u/us_b:.2f}x;compile_hit_rate={hit:.3f};"
+         f"dispatches={dispatches};programs={programs};padded_tiles={padded}")
+
+
+def _serve_warm_cold_bench() -> None:
+    """Region read through an in-process ``VolumePool`` (admission + shared
+    tile cache + bucketed decode): first touch pays entropy decode and
+    device dispatch, the warm re-read must come out of the shared cache."""
+    import time
+
+    from repro.serve import VolumePool
+
+    x = jnp.asarray(nyx_like_field(TILED_VOLUME, "temperature", seed=19))
+    vol = api.compress(x, eb=1e-3, tiled=True, tile=TILED_TILE,
+                       predictor="lorenzo")
+    pool = VolumePool(cache_bytes=64 << 20)
+    pool.add_volume("bench", api.CompressedVolume(
+        vol.artifact, tile_cache=pool.cache, cache_ns="bench"))
+    roi = ",".join(f"0:{t}" for t in vol.artifact.tile)  # one lane
+
+    t0 = time.perf_counter()  # timed() warms up first, which would fill the cache
+    cold, _ = pool.region("bench", roi)
+    us_cold = (time.perf_counter() - t0) * 1e6
+    (warm, _meta), us_warm = timed(lambda: pool.region("bench", roi), repeats=3)
+    assert np.array_equal(cold, warm), \
+        "warm region read must be byte-equal to the cold decode"
+    info = pool.cache.info()
+    assert info["hits"] > 0, "warm reads must hit the pool's shared cache"
+    emit("throughput/serve/region_warm_vs_cold", us_warm,
+         f"cold_us={us_cold:.0f};speedup={us_cold/us_warm:.1f}x;"
+         f"hits={info['hits']};misses={info['misses']}")
+
+
 def _lint_gate_bench() -> None:
     """The RA001–RA005 static-analysis gate (docs/ANALYSIS.md) runs on
     every CI push; this row guards that a full-tree lint stays interactive
@@ -319,6 +387,8 @@ def main() -> None:
     _verify_overhead_bench()
     _cached_region_bench()
     _tile_enhance_bench()
+    _bucketed_decode_bench()
+    _serve_warm_cold_bench()
     _lint_gate_bench()
 
     # kernels (interpret mode on CPU: correctness-path timing only)

@@ -206,10 +206,15 @@ class CompressedVolume:
 
     def __init__(self, artifact: A.Artifact, *, stats: GWLZStats | None = None,
                  pipeline: GWLZ | None = None, cache_bytes: int | None = None,
-                 tile_cache: TileCache | None = None, cache_ns=None):
+                 tile_cache: TileCache | None = None, cache_ns=None,
+                 decode_batcher=None):
         self.artifact = artifact
         self.train_stats = stats  # GWLZStats from enhanced compression, or None
         self.pipeline = pipeline or GWLZ()
+        # optional cross-request DecodeBatcher (exec/cache.py): owned claimed
+        # lanes are decoded through a shared micro-batched dispatch instead of
+        # one device call per request (the serving pool injects this)
+        self.decode_batcher = decode_batcher
         self._cache: np.ndarray | None = None  # one-shot full-decode cache
         tiles_total = artifact.n_tiles if isinstance(artifact, TiledCompressed) else 1
         self.stats = DecodeStats(tiles_total, train=stats)
@@ -352,13 +357,12 @@ class CompressedVolume:
             if mine:
                 mine_ids = [k[1] for k in mine]
                 try:
-                    dec = np.asarray(
-                        self.pipeline.decode_tiles(self.artifact, mine_ids))
+                    got = self._decode_claimed(mine_ids)
                 except BaseException:
                     cache.abandon(mine)
                     raise
-                for j, k in enumerate(mine):
-                    tile = np.ascontiguousarray(dec[j])
+                for k in mine:
+                    tile = got[k[1]]
                     cache.fulfill(k, tile)
                     found[k[1]] = tile
                 decoded += len(mine)
@@ -375,6 +379,21 @@ class CompressedVolume:
         # semantics predate the cache, where touched == entropy-decoded)
         _tiled._mirror_stats(len(ids), self.stats.tiles_total)
         return np.stack([found[i] for i in ids])
+
+    def _decode_claimed(self, mine_ids: list[int]) -> dict[int, np.ndarray]:
+        """Decode lanes this request owns claims for: one direct pipeline
+        call, or — with a ``decode_batcher`` attached — a shared micro-batched
+        dispatch coalescing concurrent requests to this volume.  The batcher
+        group key is the cache namespace (volume identity in a shared pool)."""
+
+        def decode(ids: list[int]) -> dict[int, np.ndarray]:
+            dec = np.asarray(self.pipeline.decode_tiles(self.artifact, ids))
+            return {i: np.ascontiguousarray(dec[j])
+                    for j, i in enumerate(ids)}
+
+        if self.decode_batcher is None:
+            return decode(mine_ids)
+        return self.decode_batcher.submit(self.cache_ns, mine_ids, decode)
 
     def __array__(self, dtype=None, copy=None) -> np.ndarray:
         arr = self.decode()
@@ -722,7 +741,7 @@ def from_bytes(blob, *, pipeline: GWLZ | None = None,
                cache_bytes: int | None = None,
                tile_cache: TileCache | None = None, cache_ns=None,
                verify: str = "lazy", on_corrupt: str = "raise",
-               fill_value: float = 0.0):
+               fill_value: float = 0.0, decode_batcher=None):
     """Sniff the envelope magic and reconstruct the right reader.
 
     ``SZJX``/``GWTC`` (any registered artifact container) ->
@@ -739,7 +758,8 @@ def from_bytes(blob, *, pipeline: GWLZ | None = None,
                                   on_corrupt=on_corrupt, fill_value=fill_value)
     art = _apply_verify(A.from_bytes(blob), verify, on_corrupt, fill_value)
     return CompressedVolume(art, pipeline=pipeline, cache_bytes=cache_bytes,
-                            tile_cache=tile_cache, cache_ns=cache_ns)
+                            tile_cache=tile_cache, cache_ns=cache_ns,
+                            decode_batcher=decode_batcher)
 
 
 def save(path: str | os.PathLike,
@@ -771,7 +791,7 @@ def open(path: str | os.PathLike, *, pipeline: GWLZ | None = None,
          mmap: bool = True, cache_bytes: int | None = None,
          tile_cache: TileCache | None = None, cache_ns=None,
          verify: str = "lazy", on_corrupt: str = "raise",
-         fill_value: float = 0.0):
+         fill_value: float = 0.0, decode_batcher=None):
     """Open a compressed file, sniffing the envelope to pick the decoder.
 
     Returns a :class:`CompressedVolume` for single-artifact files (``SZJX``
@@ -814,13 +834,13 @@ def open(path: str | os.PathLike, *, pipeline: GWLZ | None = None,
         return from_bytes(blob, pipeline=pipeline, cache_bytes=cache_bytes,
                           tile_cache=tile_cache, cache_ns=cache_ns,
                           verify=verify, on_corrupt=on_corrupt,
-                          fill_value=fill_value)
+                          fill_value=fill_value, decode_batcher=decode_batcher)
     mv = memoryview(mm)
     try:
         obj = from_bytes(mv, pipeline=pipeline, cache_bytes=cache_bytes,
                          tile_cache=tile_cache, cache_ns=cache_ns,
                          verify=verify, on_corrupt=on_corrupt,
-                         fill_value=fill_value)
+                         fill_value=fill_value, decode_batcher=decode_batcher)
     except BaseException:
         mv.release()
         mm.close()

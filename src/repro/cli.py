@@ -309,7 +309,8 @@ def cmd_serve(args) -> int:
         server = _serve.RegionServer(
             volumes, host=args.host, port=args.port, cache_bytes=cache_bytes,
             mem_budget=mem_budget, max_queue=args.max_queue,
-            on_corrupt=args.on_corrupt)
+            on_corrupt=args.on_corrupt,
+            batch_wait_ms=None if args.no_batcher else args.batch_wait_ms)
     except OSError as e:
         raise _fail("serve", f"cannot start: {e.strerror or e}")
     except api.IntegrityError as e:
@@ -466,6 +467,13 @@ def main(argv: list[str] | None = None) -> int:
     s.add_argument("--on-corrupt", default="raise",
                    choices=["raise", "quarantine"],
                    help="per-lane CRC failure policy for served volumes")
+    s.add_argument("--batch-wait-ms", type=float, default=2.0,
+                   help="decode micro-batcher max wait: how long the first "
+                        "request of a round holds the dispatch open for "
+                        "concurrent requests to join (docs/SERVING.md)")
+    s.add_argument("--no-batcher", action="store_true",
+                   help="disable cross-request decode batching (each request "
+                        "dispatches its own claimed lanes)")
     s.add_argument("--smoke", action="store_true",
                    help="start, self-exercise every endpoint over HTTP "
                         "(asserting cache hits on a repeated ROI), then exit")

@@ -227,21 +227,26 @@ class GWLZ:
         bounds = normalize_roi(roi, tuple(artifact.shape))
         return recon[tuple(slice(lo, hi) for lo, hi in bounds)]
 
-    def decode_tiles(self, artifact, lane_ids, *, workers: int | None = None) -> jax.Array:
+    def decode_tiles(self, artifact, lane_ids, *, workers: int | None = None,
+                     bucket_cap: int | None = None) -> jax.Array:
         """Decode the named lanes of a tiled artifact to FINAL per-tile
         values (enhancer applied when attached): ``[len(ids), *tile]``.
 
         This is the unit the façade's concurrent tile cache stores — the
         per-tile programs are fixed-shape, so any subset reconstructs the
         exact bits the full decode would, and cached tiles can be stitched
-        with freshly decoded ones."""
+        with freshly decoded ones.  Batches dispatch bucket-padded
+        (``tiled.dispatch_bucketed``) so arbitrary lane counts reuse a
+        bounded set of compiled programs; ``bucket_cap=0`` disables."""
         from repro.sz import tiled
 
         recon, _, bad = tiled.decode_lanes(artifact, lane_ids, workers=workers,
-                                           with_mask=True)
+                                           with_mask=True,
+                                           bucket_cap=bucket_cap)
         transform = self._tile_enhancer(artifact)
         if transform is not None:
-            recon = transform(recon)
+            recon = tiled.apply_tile_transform(transform, recon,
+                                               bucket_cap=bucket_cap)
             # quarantined tiles must stay at the fill value — the enhancer
             # must not fabricate data for a lane that failed its checksum
             recon = tiled._refill_quarantined(recon, bad, artifact.fill_value)
@@ -278,6 +283,13 @@ class GWLZ:
         def transform(tiles: jax.Array) -> jax.Array:
             return enhance_tiles(tiles, model, clamp_eb=clamp)
 
+        # compiled-program identity for the bucketed dispatcher
+        # (tiled.apply_tile_transform): every static knob that changes the
+        # traced enhancer program, never the batch size
+        transform.program_key = (
+            "gwlz-enhance", int(model.cfg.n_groups), int(model.cfg.channels),
+            bool(model.cfg.residual_learning), tuple(artifact.tile),
+            clamp is not None)
         return transform
 
     def _compress_tiled(

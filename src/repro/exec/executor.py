@@ -89,6 +89,10 @@ class StreamReport:
     # with device entropy the host stage shrinks to container append+commit
     host_stage_s: float = 0.0
     entropy_device: bool = False
+    # compile accounting: how many FRESH device programs this stream forced
+    # (the plan's uniform batch width means at most one encode program per
+    # stream geometry; 0 = fully warm, via tiled.register_program_key)
+    programs_compiled: int = 0
 
     @property
     def peak_over_budget(self) -> float:
@@ -193,6 +197,14 @@ def stream_compress(
     device_entropy = _accel_default() if use_pallas is None else bool(use_pallas)
     plan = plan_stream(src.shape, tile, mem_budget, predictor=predictor,
                        levels=levels, device_entropy=device_entropy)
+    # the plan guarantees one uniform device-batch width (the short final run
+    # is padded), so this stream's encode is exactly one compiled program —
+    # register its identity so StreamReport can say whether it was fresh
+    from repro.sz.tiled import register_program_key
+
+    programs_compiled = int(register_program_key(
+        ("stream-encode", predictor, tuple(plan.tile), int(plan.batch_tiles),
+         order, int(levels), bool(device_entropy))))
     want = (plan.shape, plan.tile, eb, backend, predictor, order, levels)
 
     start_tile, resumed_batches = 0, 0
@@ -395,4 +407,5 @@ def stream_compress(
         resumed_batches=resumed_batches,
         host_stage_s=host_stage_s,
         entropy_device=device_entropy,
+        programs_compiled=programs_compiled,
     )

@@ -17,7 +17,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.sz.predictor import _padded_shape
-from repro.sz.tiled import tile_grid
+from repro.sz.tiled import bucket_chunks, tile_grid
 
 
 def tile_working_bytes(tile: tuple[int, ...], predictor: str, levels: int,
@@ -35,6 +35,15 @@ def tile_working_bytes(tile: tuple[int, ...], predictor: str, levels: int,
         return 4 * t + 13 * p + extra
     # lorenzo: codes i32 + recon f32 on the tile grid
     return 4 * t + 8 * t + extra
+
+
+def bucketed_batch_tiles(n_lanes: int, bucket_cap: int | None = None) -> int:
+    """Device-batch tile count after bucket padding: the sum of the bucket
+    widths ``tiled.dispatch_bucketed`` will actually dispatch for ``n_lanes``
+    real tiles.  Admission control prices requests with THIS number — padded
+    rows occupy device working set exactly like real rows, so a 5-lane
+    request dispatched through an 8-wide bucket must be admitted as 8."""
+    return sum(bucket_chunks(int(n_lanes), bucket_cap))
 
 
 def max_inflight_tiles(

@@ -43,8 +43,9 @@ import numpy as np
 
 from repro import api
 from repro.errors import IntegrityError
-from repro.exec.cache import TileCache
-from repro.exec.plan import tile_working_bytes
+from repro.exec.cache import DecodeBatcher, TileCache
+from repro.exec.plan import bucketed_batch_tiles, tile_working_bytes
+from repro.sz import tiled as _tiled
 from repro.sz.tiled import TiledCompressed, region_tiles
 
 __all__ = [
@@ -187,14 +188,22 @@ class VolumePool:
     def __init__(self, volumes=None, *, cache_bytes: int | None = None,
                  mem_budget: int = DEFAULT_MEM_BUDGET, max_queue: int = 1024,
                  admit_timeout: float = 60.0, verify: str = "lazy",
-                 on_corrupt: str = "raise", fill_value: float = 0.0):
+                 on_corrupt: str = "raise", fill_value: float = 0.0,
+                 batch_wait_ms: float | None = 2.0,
+                 batch_max_tiles: int = 256):
         self.cache = TileCache(
             api.DEFAULT_TILE_CACHE_BYTES if cache_bytes is None else cache_bytes)
         self.admission = AdmissionController(
             mem_budget, max_queue=max_queue, timeout=admit_timeout)
         self.metrics = _Metrics()
+        # cross-request decode micro-batcher (exec/cache.py): concurrent
+        # requests to one volume coalesce their claimed-lane decodes into one
+        # bucketed device dispatch per round; batch_wait_ms=None disables
+        self.batcher = None if batch_wait_ms is None else DecodeBatcher(
+            max_wait_ms=batch_wait_ms, max_batch_tiles=batch_max_tiles)
         self._open_kw = dict(verify=verify, on_corrupt=on_corrupt,
-                             fill_value=fill_value)
+                             fill_value=fill_value,
+                             decode_batcher=self.batcher)
         self._volumes: dict[str, api.CompressedVolume] = {}  # guarded-by: _lock
         self._owned: set[str] = set()  # guarded-by: _lock
         self._etag_seeds: dict[str, str] = {}  # guarded-by: _lock
@@ -206,6 +215,8 @@ class VolumePool:
         """Register ``spec`` (a path, or an open handle) under ``name``."""
         if isinstance(spec, api.CompressedVolume):
             vol, owned = spec, False
+            if vol.decode_batcher is None:
+                vol.decode_batcher = self.batcher
         else:
             obj = api.open(spec, tile_cache=self.cache, cache_ns=name,
                            **self._open_kw)
@@ -240,11 +251,14 @@ class VolumePool:
 
     def _request_cost(self, vol: api.CompressedVolume, n_lanes: int) -> int:
         """Working-set bytes a region decode may allocate, priced with the
-        same per-tile estimate the streaming planner uses."""
+        same per-tile estimate the streaming planner uses.  Lane counts are
+        rounded up to their bucketed dispatch width (exec/plan.py): the
+        padded rows occupy device working set exactly like real ones, so
+        admission must charge for them."""
         art = vol.artifact
         if isinstance(art, TiledCompressed):
             per = tile_working_bytes(art.tile, art.predictor, art.levels)
-            return n_lanes * per
+            return bucketed_batch_tiles(n_lanes) * per
         return 3 * int(np.prod(art.shape)) * 4  # monolithic: full decode
 
     def _etag_seed(self, name: str, vol: api.CompressedVolume) -> str:
@@ -341,6 +355,15 @@ class VolumePool:
         out = self.metrics.snapshot()
         out["cache"] = self.cache.info()
         out["admission"] = self.admission.info()
+        if self.batcher is not None:
+            out["batcher"] = self.batcher.info()
+        # process-wide compile/dispatch counters (sz/tiled.py): `programs` is
+        # the number of distinct compiled decode executables ever dispatched —
+        # flat after warmup means zero recompiles on the hot path
+        decode = _tiled.dispatch_stats()
+        decode["batch_hist"] = {str(k): v
+                                for k, v in sorted(decode["batch_hist"].items())}
+        out["decode"] = decode
         out["volumes"] = {n: self.info(n)["stats"] for n in self.names}
         return out
 

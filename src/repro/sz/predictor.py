@@ -310,6 +310,17 @@ class TilePredictor:
         """Payload pytree ([B, ...]) -> recon [B, *tile] float32."""
         raise NotImplementedError
 
+    def decode_program_key(self, *, tile: tuple[int, ...], order: str,
+                           levels: int) -> tuple:
+        """Identity of the compiled decode program for one artifact geometry.
+
+        The bucketed dispatcher (``tiled.dispatch_bucketed``) appends the
+        bucket width, so each (key, width) pair names exactly one XLA
+        executable — the serving layer's compile-cache accounting hangs off
+        this.  Every static argument that changes the traced program MUST be
+        in the key; batch size must NOT be (that is the bucket's job)."""
+        return ("decode", self.name, tuple(tile), order, int(levels))
+
     def lane_bytes(self, payload, i: int, backend: str, *,
                    use_pallas: bool | None = None) -> bytes:
         """Serialize tile ``i`` of a host-side (numpy) payload to one lane.

@@ -180,6 +180,130 @@ def _mirror_stats(tiles_decoded: int, tiles_total: int) -> None:
 
 
 # ---------------------------------------------------------------------------
+# bucketed dispatch + compile-cache accounting
+# ---------------------------------------------------------------------------
+#
+# Every distinct decode batch size K compiles a fresh XLA executable for the
+# float decode programs (interp decode chunks, the GWLZ enhancer's lax.map) —
+# under a serving workload with arbitrary ROI lane counts that is an unbounded
+# program cache and recompiles on the hot path.  Bucketing pads each batch to
+# a small fixed set of widths (powers of two up to DEFAULT_BUCKET_CAP), so a
+# bounded set of compiled programs serves every request after warmup.
+#
+# Padding is bit-safe by the same invariant that makes region == full decode
+# exact: no per-tile program mixes tiles (vmap / lax.map over axis 0), so the
+# padded rows cannot perturb the real rows — the pad rows are simply cropped
+# off the output.  Pad rows repeat row 0, the established idiom from
+# predictor._interp_decode_tiles_padded.
+#
+# DISPATCH_STATS / _PROGRAM_KEYS are process-wide observability for the
+# serving layer's /metrics and the load test's "zero recompiles after warmup"
+# assertion: a *program* is a distinct (semantic key, bucket width) pair seen
+# for the first time; a *dispatch* is one device invocation of such a program.
+
+DEFAULT_BUCKET_CAP = int(os.environ.get("REPRO_DECODE_BUCKET_CAP", 32))
+
+_DISPATCH_LOCK = threading.Lock()
+_PROGRAM_KEYS: set = set()
+DISPATCH_STATS = {"dispatches": 0, "programs": 0, "padded_tiles": 0,
+                  "batch_hist": {}}
+
+
+def bucket_for(n: int, bucket_cap: int | None = None) -> int:
+    """Smallest power-of-two bucket >= n, capped at ``bucket_cap``."""
+    cap = DEFAULT_BUCKET_CAP if bucket_cap is None else int(bucket_cap)
+    if n <= 0:
+        return 0
+    b = 1
+    while b < n and b < cap:
+        b <<= 1
+    return min(b, cap)
+
+
+def bucket_chunks(n: int, bucket_cap: int | None = None) -> list[int]:
+    """Split a batch of ``n`` tiles into bucket widths: full-cap chunks plus
+    one power-of-two tail bucket (e.g. n=70, cap=32 -> [32, 32, 8]).  A
+    non-positive cap disables bucketing ([n] verbatim)."""
+    cap = DEFAULT_BUCKET_CAP if bucket_cap is None else int(bucket_cap)
+    if cap <= 0 or n <= 0:
+        return [n] if n > 0 else []
+    out = [cap] * (n // cap)
+    rem = n % cap
+    if rem:
+        out.append(bucket_for(rem, cap))
+    return out
+
+
+def register_program_key(key) -> bool:
+    """Record one compiled-program identity; True the first time (a compile),
+    False on a warm hit.  The streaming executor registers its encode
+    program here so StreamReport can report compile counts the same way."""
+    with _DISPATCH_LOCK:
+        fresh = key not in _PROGRAM_KEYS
+        if fresh:
+            _PROGRAM_KEYS.add(key)
+            DISPATCH_STATS["programs"] += 1
+        return fresh
+
+
+def _record_dispatch(key, bucket: int, padded: int) -> None:
+    with _DISPATCH_LOCK:
+        if key not in _PROGRAM_KEYS:
+            _PROGRAM_KEYS.add(key)
+            DISPATCH_STATS["programs"] += 1
+        DISPATCH_STATS["dispatches"] += 1
+        DISPATCH_STATS["padded_tiles"] += padded
+        hist = DISPATCH_STATS["batch_hist"]
+        hist[bucket] = hist.get(bucket, 0) + 1
+
+
+def dispatch_stats() -> dict:
+    """Snapshot of the process-wide dispatch/compile counters."""
+    with _DISPATCH_LOCK:
+        out = dict(DISPATCH_STATS)
+        out["batch_hist"] = dict(DISPATCH_STATS["batch_hist"])
+        return out
+
+
+def reset_dispatch_stats() -> None:
+    """Test/bench hook: zero the counters AND forget seen program keys."""
+    with _DISPATCH_LOCK:
+        _PROGRAM_KEYS.clear()
+        DISPATCH_STATS.update(dispatches=0, programs=0, padded_tiles=0,
+                              batch_hist={})
+
+
+def dispatch_bucketed(fn, tree, n: int, *, key=(), bucket_cap=None):
+    """Run ``fn`` (a per-tile batched program) over a [n, ...] pytree through
+    bucket-padded fixed-shape invocations.
+
+    ``key`` names the program semantics (predictor, tile, levels, ...); the
+    bucket width is appended so each (key, width) pair is one compiled
+    executable.  Pad rows repeat row 0 and are cropped from the output —
+    bit-safe because no per-tile program mixes batch rows.  ``bucket_cap=0``
+    disables bucketing (single unpadded call, still counted)."""
+    cap = DEFAULT_BUCKET_CAP if bucket_cap is None else int(bucket_cap)
+    if cap <= 0 or n <= 0:
+        if n > 0:
+            _record_dispatch(tuple(key) + (int(n),), int(n), 0)
+        return fn(tree)
+    outs = []
+    off = 0
+    for width in bucket_chunks(n, cap):
+        take = min(width, n - off)
+        part = jax.tree.map(lambda a: a[off:off + take], tree)
+        pad = width - take
+        if pad:
+            part = jax.tree.map(
+                lambda a: jnp.concatenate([a, jnp.repeat(a[:1], pad, axis=0)]),
+                part)
+        _record_dispatch(tuple(key) + (width,), width, pad)
+        outs.append(fn(part)[:take])
+        off += take
+    return outs[0] if len(outs) == 1 else jnp.concatenate(outs)
+
+
+# ---------------------------------------------------------------------------
 # tile grid geometry
 # ---------------------------------------------------------------------------
 
@@ -611,6 +735,7 @@ def verify_lanes(artifact: TiledCompressed, lane_ids=None, *,
 def decode_lanes(
     artifact: TiledCompressed, lane_ids, *, workers: int | None = None,
     with_mask: bool = False, use_pallas: bool | None = None,
+    bucket_cap: int | None = None,
 ):
     """Decode the given lanes and reconstruct them; returns
     ``(recon [len(ids), *tile], lanes_decoded)`` — or, with
@@ -642,11 +767,17 @@ def decode_lanes(
     if good:
         payload = {k: jnp.asarray(np.stack([it[k] for it in items]))
                    for k in items[0]}
-        recon = pred.decode_tiles(payload, artifact.eb_abs, tile=artifact.tile,
-                                  order=artifact.order, levels=artifact.levels)
+        key = pred.decode_program_key(tile=artifact.tile, order=artifact.order,
+                                      levels=artifact.levels)
+        recon = dispatch_bucketed(
+            lambda p: pred.decode_tiles(
+                p, artifact.eb_abs, tile=artifact.tile,
+                order=artifact.order, levels=artifact.levels),
+            payload, len(good), key=key, bucket_cap=bucket_cap)
     bad_mask = np.zeros(len(lane_ids), bool)
     if len(good) < len(lane_ids):
-        bad_mask[[j for j in range(len(lane_ids)) if j not in set(good)]] = True
+        good_set = set(good)
+        bad_mask[[j for j in range(len(lane_ids)) if j not in good_set]] = True
         full = jnp.full((len(lane_ids),) + tuple(artifact.tile),
                         artifact.fill_value, jnp.float32)
         recon = full.at[jnp.asarray(good, jnp.int32)].set(recon) if good else full
@@ -655,9 +786,23 @@ def decode_lanes(
     return recon, len(good)
 
 
+def apply_tile_transform(tile_transform, recon, *, bucket_cap=None):
+    """Run a per-tile transform over a [K, *tile] batch, bucketed when the
+    transform declares a ``program_key`` attribute naming its compiled
+    program's identity (the GWLZ enhancer does).  Unkeyed transforms (ad-hoc
+    callables) run in one unbucketed call — there is nothing safe to cache
+    them under, and inflating the program counters with anonymous callables
+    would poison the zero-recompile assertion."""
+    key = getattr(tile_transform, "program_key", None)
+    if key is None:
+        return tile_transform(recon)
+    return dispatch_bucketed(tile_transform, recon, int(recon.shape[0]),
+                             key=tuple(key), bucket_cap=bucket_cap)
+
+
 def decompress_tiled(
     artifact: TiledCompressed, *, workers: int | None = None, tile_transform=None,
-    use_pallas: bool | None = None,
+    use_pallas: bool | None = None, bucket_cap: int | None = None,
 ) -> jax.Array:
     """Full decode: every lane, stitched and cropped to the original shape.
 
@@ -666,9 +811,10 @@ def decompress_tiled(
     act per-tile so region and full decode stay consistent)."""
     recon, _, bad = decode_lanes(artifact, range(artifact.n_tiles),
                                  workers=workers, with_mask=True,
-                                 use_pallas=use_pallas)
+                                 use_pallas=use_pallas, bucket_cap=bucket_cap)
     if tile_transform is not None:
-        recon = tile_transform(recon)
+        recon = apply_tile_transform(tile_transform, recon,
+                                     bucket_cap=bucket_cap)
         recon = _refill_quarantined(recon, bad, artifact.fill_value)
     out = stitch_tiles(recon, artifact.grid)
     return out[tuple(slice(0, d) for d in artifact.shape)]
@@ -732,17 +878,21 @@ def assemble_region(recon, geom, tile: tuple[int, ...]):
 def decompress_region(
     artifact: TiledCompressed, roi, *, workers: int | None = None,
     tile_transform=None, use_pallas: bool | None = None,
+    bucket_cap: int | None = None,
 ) -> jax.Array:
     """Decode only the tiles intersecting ``roi``; returns the ROI's values.
 
     Bit-identical to ``decompress_tiled(artifact)[roi]`` — the per-tile
     transform is elementwise-exact, so the subset batch reconstructs the
     same values the full batch would (any ``tile_transform`` must preserve
-    this by acting on each tile independently)."""
+    this by acting on each tile independently; bucket padding preserves it
+    too, since pad rows are repeats of row 0 cropped from the output)."""
     ids, geom = region_tiles(artifact, roi)
     recon, _, bad = decode_lanes(artifact, ids.tolist(), workers=workers,
-                                 with_mask=True, use_pallas=use_pallas)
+                                 with_mask=True, use_pallas=use_pallas,
+                                 bucket_cap=bucket_cap)
     if tile_transform is not None:
-        recon = tile_transform(recon)
+        recon = apply_tile_transform(tile_transform, recon,
+                                     bucket_cap=bucket_cap)
         recon = _refill_quarantined(recon, bad, artifact.fill_value)
     return assemble_region(recon, geom, artifact.tile)

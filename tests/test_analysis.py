@@ -183,6 +183,51 @@ def test_ra002_function_passed_to_wrapper():
     assert "carry" in findings[0].message
 
 
+def test_ra002_bucketed_dispatch_host_loop_clean():
+    """The bucketed-dispatch idiom (``sz/tiled.py::dispatch_bucketed``):
+    chunk widths, slice bounds, and the pad decision are host-side ints,
+    and the lambdas handed to ``jax.tree.map`` slice by those static bounds
+    — none of it may trip the tracer-safety rule."""
+    src = _src("""
+        import jax
+        import jax.numpy as jnp
+
+        def dispatch_bucketed(fn, tree, n, widths):
+            outs, off = [], 0
+            for width in widths:              # host ints: static loop
+                take = min(width, n - off)
+                part = jax.tree.map(lambda a: a[off:off + take], tree)
+                pad = width - take
+                if pad:                       # host int: static branch
+                    part = jax.tree.map(
+                        lambda a: jnp.concatenate(
+                            [a, jnp.repeat(a[:1], pad, axis=0)]), part)
+                outs.append(fn(part)[:take])
+                off += take
+            return outs[0] if len(outs) == 1 else jnp.concatenate(outs)
+    """)
+    assert analyze_source(src, rules=["RA002"]) == []
+
+
+def test_ra002_bucketed_decode_fn_traced_branch_flagged():
+    """The anti-pattern the clean variant avoids: a decode fn handed to
+    ``jax.lax.map`` that branches on its traced payload (say, to skip pad
+    rows) would crash or silently specialize under jit — flagged."""
+    src = _src("""
+        import jax
+
+        def decode_one(payload):
+            if payload:
+                return payload + 1
+            return payload
+
+        recon = jax.lax.map(decode_one, batch)
+    """)
+    findings = analyze_source(src, rules=["RA002"])
+    assert _rules(findings) == ["RA002"]
+    assert "payload" in findings[0].message
+
+
 # ---------------------------------------------------------------------------
 # RA004 exception hygiene
 # ---------------------------------------------------------------------------

@@ -47,6 +47,15 @@ def test_run_fast_smoke():
     enh_rows = [l for l in lines[1:]
                 if l.split(",")[0] == "throughput/tiled/enhance_batched"]
     assert enh_rows and "speedup_vs_loop=" in enh_rows[0], lines
+    # bucketed decode must report its compile-cache hit rate (ISSUE 10;
+    # bit-identity vs the unbucketed path is asserted inside the benchmark)
+    bk_rows = [l for l in lines[1:]
+               if l.split(",")[0] == "throughput/tiled/decode_bucketed"]
+    assert bk_rows and "compile_hit_rate=" in bk_rows[0], lines
+    # serving-layer warm re-read must report its speedup over the cold path
+    wc_rows = [l for l in lines[1:]
+               if l.split(",")[0] == "throughput/serve/region_warm_vs_cold"]
+    assert wc_rows and "speedup=" in wc_rows[0], lines
 
 
 def test_run_rejects_unknown_module():

@@ -467,3 +467,134 @@ def test_cli_serve_smoke_and_usage(tmp_path, tiled_vol, capsys):
                        "--port", "0"]) == 2
     assert _exit_code(["serve", f"v={out}", "--port", "0",
                        "--cache-bytes", "banana"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# DecodeBatcher: cross-request micro-batched dispatch (ISSUE 10)
+# ---------------------------------------------------------------------------
+
+
+def test_decode_batcher_coalesces_across_threads():
+    """N concurrent single-lane submits to one volume must collapse into ONE
+    decode call: with ``max_batch_tiles == N`` the leader cannot drain until
+    every submitter has arrived, so the round is deterministic."""
+    from repro.exec.cache import DecodeBatcher
+
+    calls: list[list[int]] = []
+    lock = threading.Lock()
+
+    def decode(ids):
+        with lock:
+            calls.append(list(ids))
+        return {i: i * 10 for i in ids}
+
+    n = 8
+    b = DecodeBatcher(max_wait_ms=5000.0, max_batch_tiles=n)
+    gate = threading.Barrier(n)
+    out: dict[int, dict] = {}
+
+    def worker(i):
+        gate.wait()
+        got = b.submit("vol", [i], decode)
+        with lock:
+            out[i] = got
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(calls) == 1 and sorted(calls[0]) == list(range(n))
+    assert out == {i: {i: i * 10} for i in range(n)}
+    assert b.dispatches == 1 and b.submits == n
+    assert b.coalesced_submits == n - 1
+    assert b.pending_tiles == 0 and b.peak_pending_tiles == n
+    info = b.info()
+    assert info["batch_hist"] == {str(n): 1}
+
+
+def test_decode_batcher_propagates_leader_error():
+    """A decode failure in the leader must surface in EVERY submitter of the
+    round — a follower silently getting an empty dict would serve garbage."""
+    from repro.exec.cache import DecodeBatcher
+
+    def boom(ids):
+        raise RuntimeError("lane decode failed")
+
+    n = 4
+    b = DecodeBatcher(max_wait_ms=5000.0, max_batch_tiles=n)
+    gate = threading.Barrier(n)
+    errs: list[str] = []
+    lock = threading.Lock()
+
+    def worker(i):
+        gate.wait()
+        try:
+            b.submit("vol", [i], boom)
+        except RuntimeError as e:
+            with lock:
+                errs.append(str(e))
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(errs) == n and all("lane decode failed" in e for e in errs)
+    assert b.pending_tiles == 0, "a failed round must not leak queue depth"
+
+
+def test_decode_batcher_dedups_and_empty():
+    from repro.exec.cache import DecodeBatcher
+
+    seen: list[list[int]] = []
+
+    def decode(ids):
+        seen.append(list(ids))
+        return {i: -i for i in ids}
+
+    b = DecodeBatcher(max_wait_ms=0.0, max_batch_tiles=64)
+    assert b.submit("v", [], decode) == {}
+    got = b.submit("v", [3, 3, 5], decode)
+    assert seen == [[3, 5]], "duplicate lane ids must decode once"
+    assert got == {3: -3, 5: -5}
+
+
+def test_pool_batcher_metrics_and_bucketed_cost(tmp_path, tiled_vol, full):
+    """The pool prices admission on the PADDED batch (6 lanes bucket to 8),
+    routes decodes through its batcher, and exposes both the batcher and the
+    process-wide compile/dispatch counters in /metrics."""
+    from repro.exec.plan import bucketed_batch_tiles
+
+    pool = VolumePool({"v": _gwtc_path(tmp_path, tiled_vol)},
+                      cache_bytes=1 << 20, mem_budget=32 << 20,
+                      batch_wait_ms=1.0)
+    with pool:
+        art = pool.volume("v").artifact
+        per = tile_working_bytes(art.tile, art.predictor, art.levels)
+        roi = "0:17,0:9,0:8"  # 3*2*1 = 6 lanes -> one width-8 bucket
+        block, meta = pool.region("v", roi)
+        np.testing.assert_array_equal(block, full[0:17, 0:9, 0:8])
+        assert meta["lanes"] == 6
+        assert bucketed_batch_tiles(6) == 8
+        assert meta["cost_bytes"] == 8 * per, \
+            "admission must price the padded batch, not the raw lane count"
+        m = pool.metrics_snapshot()
+        assert m["batcher"]["dispatches"] >= 1
+        assert m["batcher"]["submits"] >= 1
+        assert m["decode"]["programs"] >= 1
+        assert m["decode"]["dispatches"] >= 1
+        assert all(isinstance(k, str) for k in m["decode"]["batch_hist"])
+
+
+def test_pool_no_batcher_mode(tmp_path, tiled_vol, full):
+    """``batch_wait_ms=None`` (the CLI's ``--no-batcher``) must serve the
+    same bytes with no batcher block in /metrics."""
+    pool = VolumePool({"v": _gwtc_path(tmp_path, tiled_vol)},
+                      cache_bytes=1 << 20, mem_budget=32 << 20,
+                      batch_wait_ms=None)
+    with pool:
+        assert pool.batcher is None
+        block, _ = pool.region("v", "0:12,:,4:20")
+        np.testing.assert_array_equal(block, full[0:12, :, 4:20])
+        assert "batcher" not in pool.metrics_snapshot()

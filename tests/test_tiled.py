@@ -309,3 +309,76 @@ def test_gwlz_tiled_enhancement_improves_or_gates(vol):
                                         min_group_pixels=64))
     _, stats = gw.compress_tiled(vol, (8, 16, 8), rel_eb=1e-3)
     assert stats.psnr_gwlz >= stats.psnr_sz - 1e-6
+
+
+# -- bucketed dispatch + compile-cache accounting (ISSUE 10) -------------------
+
+
+def test_bucket_helpers():
+    assert tiled.bucket_for(1) == 1
+    assert tiled.bucket_for(3) == 4
+    assert tiled.bucket_for(32) == 32
+    assert tiled.bucket_for(5, bucket_cap=4) == 4
+    assert tiled.bucket_chunks(70, 32) == [32, 32, 8]
+    assert tiled.bucket_chunks(5, 4) == [4, 1]
+    assert tiled.bucket_chunks(7, 4) == [4, 4]
+    assert tiled.bucket_chunks(70, 0) == [70]  # cap<=0 disables bucketing
+    assert tiled.bucket_chunks(0) == []
+
+
+def test_bucketed_decode_accounting(vol):
+    """Dispatch/program counters must reflect the bucket plan exactly: 7
+    lanes under cap 4 is two width-4 dispatches with one padded row, and the
+    bucketed bytes equal the unbucketed ones."""
+    art, _ = tiled.compress_tiled(
+        vol, (8, 16, 8), abs_eb=float(jnp.max(vol) - jnp.min(vol)) * 1e-3)
+    before = tiled.dispatch_stats()
+    plain, _ = tiled.decode_lanes(art, range(7), bucket_cap=0)
+    mid = tiled.dispatch_stats()
+    # the unpadded call is still one counted device dispatch (width 7)
+    assert mid["dispatches"] - before["dispatches"] == 1
+    bucketed, _ = tiled.decode_lanes(art, range(7), bucket_cap=4)
+    after = tiled.dispatch_stats()
+    assert after["dispatches"] - mid["dispatches"] == 2  # chunks [4, 4]
+    assert after["padded_tiles"] - mid["padded_tiles"] == 1  # 7 -> 4 + pad(3->4)
+    assert after["batch_hist"].get(4, 0) - mid["batch_hist"].get(4, 0) == 2
+    np.testing.assert_array_equal(np.asarray(bucketed), np.asarray(plain))
+
+
+def test_register_program_key_counts_once():
+    import random
+
+    key = ("test-program", random.getrandbits(64))
+    before = tiled.dispatch_stats()["programs"]
+    assert tiled.register_program_key(key) is True, "first sighting compiles"
+    assert tiled.register_program_key(key) is False, "re-registration is warm"
+    assert tiled.dispatch_stats()["programs"] - before == 1
+
+
+def test_quarantine_many_bad_lanes(vol):
+    """The quarantine mask must be built in linear time and stay correct
+    when MOST lanes are bad (the mask build used to rebuild ``set(good)``
+    per lane, quadratic in the lane count) — every tampered lane decodes to
+    the fill value, every healthy one to its clean bytes."""
+    art, _ = tiled.compress_tiled(
+        vol, (8, 16, 8), abs_eb=float(jnp.max(vol) - jnp.min(vol)) * 1e-3)
+    clean = np.asarray(tiled.decode_lanes(art, range(art.n_tiles))[0])
+    a = tiled.TiledCompressed.from_bytes(art.to_bytes())
+    assert a.lane_crcs is not None
+    keep = {3, 11, 20}
+    a.lane_crcs = a.lane_crcs.copy()
+    for i in range(a.n_tiles):
+        if i not in keep:
+            a.lane_crcs[i] ^= 0xBEEF
+    a.verify, a.on_corrupt, a.fill_value = "lazy", "quarantine", -5.0
+    recon, lanes, bad = tiled.decode_lanes(a, range(a.n_tiles),
+                                           with_mask=True)
+    assert lanes == len(keep)
+    r = np.asarray(recon)
+    for i in range(a.n_tiles):
+        if i in keep:
+            assert not bad[i]
+            np.testing.assert_array_equal(r[i], clean[i])
+        else:
+            assert bad[i] and np.all(r[i] == -5.0)
+    assert len(a.quarantined) == a.n_tiles - len(keep)
